@@ -1,0 +1,97 @@
+"""Shared benchmark utilities: artifact IO, GNN corpus building/training,
+design sampling."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def save_artifact(name: str, data: Dict):
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, default=float)
+    return path
+
+
+def load_artifact(name: str):
+    path = os.path.join(ART_DIR, name + ".json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def sample_valid_designs(n: int, seed: int = 0, **decode_kw) -> List:
+    from repro.core.design_space import decode, sample
+    from repro.core.validator import validate
+
+    rng = np.random.default_rng(seed)
+    out = []
+    while len(out) < n:
+        for u in sample(rng, n):
+            r = validate(decode(u, **decode_kw))
+            if r.ok:
+                out.append(r.design)
+            if len(out) >= n:
+                break
+    return out
+
+
+_GNN_CACHE = {}
+
+
+def trained_gnn(n_designs: int = 8, epochs: int = 40, seed: int = 0,
+                quick: bool = False):
+    """Train (and memoize) the GNN congestion model on noc_sim traces."""
+    key = (n_designs, epochs, seed, quick)
+    if key in _GNN_CACHE:
+        return _GNN_CACHE[key]
+    import jax
+
+    from repro.core.compiler import compile_chunk
+    from repro.core.noc_gnn import featurize_transfer, init_gnn, train_gnn
+    from repro.core.workload import GPT_BENCHMARKS
+
+    if quick:
+        n_designs, epochs = 4, 10
+    designs = sample_valid_designs(n_designs, seed=seed)
+    dataset = []
+    for wl in (GPT_BENCHMARKS[0], GPT_BENCHMARKS[2]):
+        for d in designs:
+            for tp, mbt in ((16, 4096), (64, 1024)):
+                g = compile_chunk(d, wl, tp=tp, mb_tokens=mbt,
+                                  cores_per_chunk=64)
+                for t in range(len(g.transfers)):
+                    if g.transfers[t].pairs:
+                        dataset.append(
+                            featurize_transfer(g, d, t, with_target=True))
+    params = init_gnn(jax.random.PRNGKey(seed))
+    t0 = time.time()
+    params, losses = train_gnn(params, dataset, epochs=epochs)
+    info = {"n_graphs": len(dataset), "train_s": time.time() - t0,
+            "loss_first": losses[0], "loss_last": losses[-1]}
+    _GNN_CACHE[key] = (params, info)
+    return params, info
+
+
+def kendall_tau(a: np.ndarray, b: np.ndarray) -> float:
+    """Kendall rank correlation (O(n^2), fine for benchmark sizes)."""
+    a, b = np.asarray(a), np.asarray(b)
+    n = len(a)
+    num = 0
+    den = 0
+    for i in range(n):
+        for j in range(i + 1, n):
+            sa = np.sign(a[i] - a[j])
+            sb = np.sign(b[i] - b[j])
+            if sa and sb:
+                num += int(sa == sb) - int(sa != sb)
+                den += 1
+    return num / max(den, 1)

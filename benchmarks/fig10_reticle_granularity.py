@@ -1,0 +1,68 @@
+"""Fig. 10 reproduction: reticle-granularity trade-off (Takeaway 3). For
+several core granularities, sweep the core-array size up to the reticle
+area limit; report training throughput vs reticle peak FLOPS, the optimal
+per cluster, and the area fraction it occupies.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.common import save_artifact
+from repro.core import components as C
+from repro.core.design_space import WSCDesign
+from repro.core.evaluator import evaluate_design
+from repro.core.validator import validate
+from repro.core.workload import GPT_BENCHMARKS
+
+
+def run(quick: bool = False) -> Dict:
+    wl = GPT_BENCHMARKS[1] if quick else GPT_BENCHMARKS[7]   # GPT-3.6B / 175B
+    rows = []
+    macs = (256, 512) if quick else (128, 256, 512, 1024, 2048)
+    arrays = ((4, 4), (8, 8), (12, 12), (16, 16), (20, 20), (24, 24))
+    for mac in macs:
+        cluster = []
+        for arr in arrays:
+            d = WSCDesign(dataflow="WS", mac_num=mac, buffer_kb=128,
+                          buffer_bw=1024, noc_bw=512, core_array=arr,
+                          inter_reticle_bw_ratio=1.0, use_stacked_dram=True,
+                          dram_bw_tbps_per_100mm2=1.0, reticle_array=(8, 8),
+                          integration="infosow")
+            v = validate(d)
+            if not v.ok:
+                continue
+            r = evaluate_design(v.design, wl, max_strategies=8)
+            if not r.feasible:
+                continue
+            cluster.append({
+                "mac": mac, "core_array": list(arr),
+                "reticle_tflops": v.design.reticle_flops() / 1e12,
+                "area_frac": v.design.reticle_area_mm2() / C.RETICLE_AREA_MM2,
+                "throughput": r.throughput,
+            })
+        if cluster:
+            best = max(cluster, key=lambda x: x["throughput"])
+            best = dict(best, optimal=True)
+            rows.extend([c if c is not best else best for c in cluster])
+    out = {"workload": wl.name, "rows": rows}
+    opt = [r for r in rows if r.get("optimal")]
+    if opt:
+        gbest = max(opt, key=lambda r: r["throughput"])
+        out["best"] = gbest
+    save_artifact("fig10_reticle_granularity", out)
+    print("\n=== Fig.10: reticle granularity ===")
+    print(f"{'mac':>6s}{'array':>9s}{'ret TFLOPS':>12s}{'area%':>8s}"
+          f"{'thpt tok/s':>13s}{'opt':>5s}")
+    for r in rows:
+        print(f"{r['mac']:6d}{str(tuple(r['core_array'])):>9s}"
+              f"{r['reticle_tflops']:12.1f}{100*r['area_frac']:8.1f}"
+              f"{r['throughput']:13.0f}{'*' if r.get('optimal') else '':>5s}")
+    if opt:
+        print(f"best reticle: {out['best']['reticle_tflops']:.0f} TFLOPS at "
+              f"{100*out['best']['area_frac']:.0f}% of reticle area limit "
+              f"(paper: optimum typically at 50-60%, not the limit)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

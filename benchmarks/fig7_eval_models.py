@@ -1,0 +1,64 @@
+"""Fig. 7 reproduction: evaluation-model speedup + accuracy vs the
+cycle-approximate simulator (our CA-sim stand-in, DESIGN.md §3).
+
+For a set of (design, workload) chunk compilations:
+  (a) wall-time of sim / analytical / GNN chunk evaluation,
+  (b) latency error of analytical + GNN vs sim,
+  (c) Kendall's tau rank correlation vs sim across designs.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import kendall_tau, sample_valid_designs, save_artifact, trained_gnn
+from repro.core.compiler import compile_chunk
+from repro.core.noc_analytical import chunk_latency_cycles
+from repro.core.noc_gnn import chunk_latency_cycles_gnn
+from repro.core.noc_sim import chunk_latency_cycles_sim
+from repro.core.workload import GPT_BENCHMARKS
+
+
+def run(quick: bool = False) -> Dict:
+    gnn, info = trained_gnn(quick=quick)
+    n_eval = 6 if quick else 12
+    designs = sample_valid_designs(n_eval, seed=7)
+    bench = GPT_BENCHMARKS[:2] if quick else GPT_BENCHMARKS[:4]
+    rows = []
+    for wl in bench:
+        sims, anas, gnns = [], [], []
+        t_sim = t_ana = t_gnn = 0.0
+        for d in designs:
+            g = compile_chunk(d, wl, tp=16, mb_tokens=2048,
+                              cores_per_chunk=64)
+            t0 = time.time(); s = chunk_latency_cycles_sim(g, d); t_sim += time.time() - t0
+            t0 = time.time(); a = chunk_latency_cycles(g, d); t_ana += time.time() - t0
+            t0 = time.time(); gn = chunk_latency_cycles_gnn(gnn, g, d); t_gnn += time.time() - t0
+            sims.append(s); anas.append(a); gnns.append(gn)
+        sims, anas, gnns = map(np.array, (sims, anas, gnns))
+        rows.append({
+            "workload": wl.name,
+            "speedup_analytical": t_sim / max(t_ana, 1e-9),
+            "speedup_gnn": t_sim / max(t_gnn, 1e-9),
+            "err_analytical_pct": float(np.mean(np.abs(anas - sims) / sims) * 100),
+            "err_gnn_pct": float(np.mean(np.abs(gnns - sims) / sims) * 100),
+            "kt_analytical": kendall_tau(anas, sims),
+            "kt_gnn": kendall_tau(gnns, sims),
+        })
+    out = {"gnn_training": info, "rows": rows}
+    save_artifact("fig7_eval_models", out)
+    print(f"\n=== Fig.7: evaluation models vs CA-sim ===")
+    print(f"{'workload':12s}{'spd(ana)':>10s}{'spd(gnn)':>10s}"
+          f"{'err(ana)%':>11s}{'err(gnn)%':>11s}{'KT(ana)':>9s}{'KT(gnn)':>9s}")
+    for r in rows:
+        print(f"{r['workload']:12s}{r['speedup_analytical']:10.1f}"
+              f"{r['speedup_gnn']:10.1f}{r['err_analytical_pct']:11.2f}"
+              f"{r['err_gnn_pct']:11.2f}{r['kt_analytical']:9.2f}"
+              f"{r['kt_gnn']:9.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

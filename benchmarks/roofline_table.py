@@ -1,0 +1,65 @@
+"""Roofline table from the multi-pod dry-run artifacts (deliverable g).
+
+Reads benchmarks/artifacts/dryrun/*.json (written by repro.launch.dryrun)
+and emits the per-(arch x shape x mesh) three-term roofline table used in
+EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import save_artifact
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def collect(variant: str = "baseline") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{variant}.json"))):
+        d = json.load(open(path))
+        row = {k: d.get(k) for k in ("arch", "shape", "mesh", "variant",
+                                     "status")}
+        if d.get("status") == "ok":
+            r = d["roofline"]
+            dom_t = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            row.update({
+                "compute_s": r["compute_s"],
+                "memory_s": r["memory_s"],
+                "collective_s": r["collective_s"],
+                "dominant": r["dominant"],
+                "roofline_frac": r["compute_s"] / dom_t if dom_t else 0.0,
+                "useful_ratio": r["useful_ratio"],
+                "state_gb_per_chip": d.get("state_bytes_per_chip", 0) / 1e9,
+                "temp_gb_per_chip": d.get("memory", {}).get(
+                    "temp_size_in_bytes", 0) / 1e9,
+                "compile_s": d.get("compile_s"),
+            })
+        rows.append(row)
+    return rows
+
+
+def run(quick: bool = False) -> Dict:
+    rows = collect()
+    ok = [r for r in rows if r["status"] == "ok"]
+    out = {"rows": rows, "n_ok": len(ok),
+           "n_skip": sum(1 for r in rows if r["status"].startswith("SKIP")),
+           "n_fail": sum(1 for r in rows if r["status"] == "FAIL")}
+    save_artifact("roofline_table", out)
+    print("\n=== Roofline table (from multi-pod dry-run) ===")
+    print(f"cells: {len(rows)}  ok: {out['n_ok']}  skip: {out['n_skip']}  "
+          f"fail: {out['n_fail']}")
+    print(f"{'arch':16s}{'shape':13s}{'mesh':12s}{'dom':11s}"
+          f"{'comp_s':>9s}{'mem_s':>9s}{'coll_s':>9s}{'frac':>7s}{'useful':>8s}")
+    for r in sorted(ok, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        print(f"{r['arch']:16s}{r['shape']:13s}{r['mesh']:12s}"
+              f"{r['dominant']:11s}{r['compute_s']:9.3f}{r['memory_s']:9.3f}"
+              f"{r['collective_s']:9.3f}{r['roofline_frac']:7.3f}"
+              f"{min(r['useful_ratio'], 99.9):8.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

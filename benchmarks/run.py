@@ -1,0 +1,58 @@
+"""Benchmark harness: one benchmark per paper table/figure + the roofline
+table from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = ("fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
+           "roofline")
+
+_MODULES = {
+    "fig7": "benchmarks.fig7_eval_models",
+    "fig8": "benchmarks.fig8_explorer",
+    "fig9": "benchmarks.fig9_core_granularity",
+    "fig10": "benchmarks.fig10_reticle_granularity",
+    "fig11": "benchmarks.fig11_inference",
+    "fig12": "benchmarks.fig12_heterogeneity",
+    "fig13": "benchmarks.fig13_dse",
+    "roofline": "benchmarks.roofline_table",
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sample counts (CI-speed)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(BENCHES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+
+    failures = []
+    for name in names:
+        mod_name = _MODULES[name.strip()]
+        print(f"\n{'='*70}\nRunning {mod_name} (quick={args.quick})\n{'='*70}",
+              flush=True)
+        t0 = time.time()
+        try:
+            import importlib
+            mod = importlib.import_module(mod_name)
+            mod.run(quick=args.quick)
+            print(f"[{name}] done in {time.time()-t0:.0f}s", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print("\nFAILED:", failures)
+        sys.exit(1)
+    print("\nAll benchmarks completed.")
+
+
+if __name__ == "__main__":
+    main()

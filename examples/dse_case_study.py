@@ -1,0 +1,52 @@
+"""Theseus DSE case study: explore WSC designs for GPT-175B training with
+MFMOBO (analytical + GNN fidelities), print the Pareto set and compare
+against the H100-like / WSE2-like / Dojo-like baselines.
+
+    PYTHONPATH=src python examples/dse_case_study.py [--quick]
+"""
+import argparse
+import functools
+
+from repro.core.baselines import DOJO_LIKE, WSE2_LIKE, gpu_cluster_eval
+from repro.core.evaluator import evaluate_design, evaluate_objectives
+from repro.core.mfmobo import run_mfmobo
+from repro.core.validator import validate
+from repro.core.workload import GPT_BENCHMARKS
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--benchmark", type=int, default=7,
+                    help="index into the GPT benchmark table (7 = 175B)")
+    args = ap.parse_args()
+
+    wl = GPT_BENCHMARKS[1 if args.quick else args.benchmark]
+    print(f"workload: {wl.name} training, batch {wl.batch} x seq {wl.seq}, "
+          f"GPU budget {wl.gpu_budget}")
+
+    f1 = functools.partial(evaluate_objectives, wl=wl, fidelity="analytical")
+    tr = run_mfmobo(f1, f1, d0=2, d1=3, k=3,
+                    N0=6 if args.quick else 14,
+                    N1=8 if args.quick else 18,
+                    n_candidates=64, seed=0)
+    front = tr.pareto()
+    print(f"\nexplored {len(tr.ys)} high-fidelity designs; "
+          f"hypervolume {tr.hv[0]:.2f} -> {tr.hv[-1]:.2f}")
+    best_i = max(range(len(tr.ys)), key=lambda i: tr.ys[i][0])
+    print(f"best design: {tr.designs[best_i].describe()}")
+    print(f"  throughput {tr.ys[best_i][0]:.0f} tok/s, "
+          f"power {tr.ys[best_i][1]/1e3:.1f} kW/wafer")
+
+    gpu_t, gpu_p = gpu_cluster_eval(wl)
+    print(f"\nbaselines at matched total area:")
+    print(f"  H100-like cluster: {gpu_t:.0f} tok/s, {gpu_p/1e3:.0f} kW")
+    for name, d in (("WSE2-like", WSE2_LIKE), ("Dojo-like", DOJO_LIKE)):
+        v = validate(d)
+        r = evaluate_design(v.design if v.ok else d, wl, max_strategies=8)
+        print(f"  {name}: {r.throughput:.0f} tok/s, {r.power_w/1e3:.1f} kW "
+              f"(strategy {r.strategy})")
+
+
+if __name__ == "__main__":
+    main()

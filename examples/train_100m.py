@@ -1,0 +1,31 @@
+"""End-to-end driver: train the full smollm-135m (~135M params) for a few
+hundred steps with checkpoint/restart. On CPU this is slow; pass --steps to
+shorten, or run on a TPU host unchanged (add --data/--model mesh axes).
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+    train_main([
+        "--arch", "smollm-135m",
+        "--steps", str(args.steps),
+        "--batch", str(args.batch),
+        "--seq", str(args.seq),
+        "--lr", "1e-3",
+        "--ckpt-dir", "/tmp/repro_ckpt_100m",
+        "--ckpt-every", "50",
+    ])
+
+
+if __name__ == "__main__":
+    main()

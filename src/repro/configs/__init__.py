@@ -1,0 +1,10 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeConfig,
+    get_config,
+    reduced_config,
+)
+from repro.configs.shapes import SHAPE_IDS, SHAPES, get_shape  # noqa: F401

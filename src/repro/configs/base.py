@@ -1,0 +1,196 @@
+"""Config system: ModelConfig / ShapeConfig dataclasses + registry.
+
+Every assigned architecture registers a `ModelConfig` here via its own module
+(src/repro/configs/<arch>.py). Shapes live in `shapes.py`. The same configs
+drive (a) the JAX runtime (models/, train/, serve/, launch/dryrun.py) and
+(b) the Theseus DSE Workload Compiler (core/workload.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    # capacity factor used by the dropless-ish dispatch (dense dispatch in ref)
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128          # N: SSD state size per head
+    head_dim: int = 64            # P: channels per SSD head
+    expand: int = 2               # d_inner = expand * d_model
+    conv_width: int = 4           # depthwise causal conv width
+    chunk: int = 128              # SSD chunk length
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    n_heads: int                  # query heads (0 for attention-free)
+    n_kv: int                     # KV heads (GQA); == n_heads for MHA
+    d_ff: int
+    vocab: int
+    # --- attention details -------------------------------------------------
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    qkv_bias: bool = False                  # qwen-style
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None    # None = full attention
+    # pattern of local:global layers, e.g. gemma3 (5, 1): 5 local then 1 global
+    local_global_pattern: Optional[Tuple[int, int]] = None
+    # --- MoE / SSM ----------------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (zamba2-style): a shared attention block applied every k layers
+    shared_attn_every: Optional[int] = None
+    # --- enc-dec / multimodal -----------------------------------------------
+    encoder_layers: int = 0                 # whisper
+    encoder_len: int = 0                    # fixed frontend length (audio frames)
+    prefix_len: int = 0                     # vlm: image patch tokens prepended
+    tied_embeddings: bool = True
+    norm_eps: float = 1e-6
+    act: str = "silu"                       # silu | gelu
+    glu: bool = True                        # gated MLP (SwiGLU etc.)
+
+    def hd(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if long-context (500k) decode is tractable: SSM/hybrid or
+        sliding-window-dominated attention."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        if self.sliding_window is not None:
+            return True
+        if self.local_global_pattern is not None:
+            return True
+        return False
+
+    def param_count(self) -> int:
+        """Approximate parameter count (used for 6ND model-flops + DSE)."""
+        D, F, V, L = self.d_model, self.d_ff, self.vocab, self.num_layers
+        hd = self.hd()
+        n_q, n_kv = self.n_heads, self.n_kv
+        total = V * D  # embedding
+        if not self.tied_embeddings:
+            total += V * D
+
+        def attn_block() -> int:
+            p = D * n_q * hd + 2 * D * n_kv * hd + n_q * hd * D
+            if self.qkv_bias:
+                p += (n_q + 2 * n_kv) * hd
+            return p
+
+        def mlp_block(dff: int) -> int:
+            return (3 if self.glu else 2) * D * dff
+
+        if self.family == "ssm":
+            s = self.ssm
+            di = s.d_inner(D)
+            nh = s.n_heads(D)
+            per = (D * (2 * di + 2 * s.state_dim + nh)  # in_proj(z,x,B,C,dt)
+                   + s.conv_width * (di + 2 * s.state_dim)
+                   + di * D + 2 * D)
+            total += L * per
+        elif self.family == "hybrid":
+            s = self.ssm
+            di = s.d_inner(D)
+            per = (D * (2 * di + 2 * s.state_dim + s.n_heads(D))
+                   + s.conv_width * (di + 2 * s.state_dim) + di * D + 2 * D)
+            total += L * per + L * mlp_block(F) // max(1, L)  # hybrid mlp folded in
+            # one shared attention block (+ its mlp) reused
+            total += attn_block() + mlp_block(F) + 4 * D
+        elif self.family == "moe":
+            per = attn_block() + self.moe.num_experts * mlp_block(F) \
+                + D * self.moe.num_experts + 2 * D
+            total += L * per
+        else:  # dense / encdec / vlm decoders
+            per = attn_block() + mlp_block(F) + 2 * D
+            total += L * per
+            if self.family == "encdec":
+                # encoder layers + per-decoder-layer cross attention
+                total += self.encoder_layers * (attn_block() + mlp_block(F) + 2 * D)
+                total += L * attn_block()
+        total += D  # final norm
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE counts top_k experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        D, F, L = self.d_model, self.d_ff, self.num_layers
+        dense = self.param_count()
+        unused = L * (self.moe.num_experts - self.moe.top_k) * \
+            ((3 if self.glu else 2) * D * F)
+        return int(dense - unused)
+
+
+# ---------------------------------------------------------------------------
+# Shape configuration (assigned input-shape set)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_ARCH_MODULES = {
+    "whisper-small": "whisper_small",
+    "qwen1.5-32b": "qwen15_32b",
+    "qwen2-0.5b": "qwen2_05b",
+    "smollm-135m": "smollm_135m",
+    "gemma3-4b": "gemma3_4b",
+    "mamba2-370m": "mamba2_370m",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "grok-1-314b": "grok1_314b",
+    "zamba2-1.2b": "zamba2_12b",
+    "paligemma-3b": "paligemma_3b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def reduced_config(arch_id: str) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    return mod.REDUCED

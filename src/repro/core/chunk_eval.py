@@ -1,0 +1,165 @@
+"""Chunk-level evaluation (paper §VI-D): TP collectives, PP stage transfers,
+DP weight-update traffic, DRAM access, pipeline (micro-batch) efficiency —
+combined with the op-level chunk latency into step time, throughput and
+power (action-energy accounting, §VI-E).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+from repro.core import components as C
+from repro.core.compiler import ChunkGraph, Strategy
+from repro.core.design_space import WSCDesign
+from repro.core.workload import BYTES, LLMWorkload
+
+
+@dataclasses.dataclass
+class StepResult:
+    step_time_s: float
+    throughput: float              # tokens/s
+    power_w: float                 # average dynamic + static (per system)
+    pipeline_eff: float
+    breakdown: Dict[str, float]    # seconds per component
+    energy_j: float
+    feasible: bool = True
+    reason: str = ""
+
+
+def _tp_allreduce_s(design: WSCDesign, wl: LLMWorkload, s: Strategy,
+                    mb_tokens: int, cores_per_chunk: int) -> float:
+    """2 all-reduces per layer over the TP group (Megatron)."""
+    if s.tp <= 1:
+        return 0.0
+    act_bytes = mb_tokens * wl.d_model * BYTES
+    vol = 2.0 * (s.tp - 1) / s.tp * act_bytes * 2.0      # 2 collectives/layer
+    cores_per_reticle = design.cores_per_reticle()
+    if cores_per_chunk <= cores_per_reticle:
+        bw = design.reticle_bisection_Bps()
+    else:
+        bw = design.inter_reticle_bw_Bps()
+    return vol / max(bw, 1.0)
+
+
+def _pp_transfer_s(design: WSCDesign, wl: LLMWorkload, s: Strategy,
+                   mb_tokens: int) -> float:
+    if s.pp <= 1:
+        return 0.0
+    act_bytes = mb_tokens * wl.d_model * BYTES
+    return act_bytes / max(design.inter_reticle_bw_Bps(), 1.0)
+
+
+def _dp_allreduce_s(design: WSCDesign, wl: LLMWorkload, s: Strategy,
+                    n_wafers: int) -> float:
+    if s.dp <= 1 or wl.phase != "train":
+        return 0.0
+    grad_bytes = wl.params_bytes() / max(s.pp, 1)
+    vol = 2.0 * (s.dp - 1) / s.dp * grad_bytes
+    wafers_per_replica = max(n_wafers / s.dp, 1e-9)
+    if wafers_per_replica >= 1.0:
+        # replicas on separate wafers: bottleneck is inter-wafer NIs
+        n_ni = 2 * (design.reticle_array[0] + design.reticle_array[1])
+        bw = n_ni * C.INTER_WAFER_BW_PER_NI
+    else:
+        bw = design.inter_reticle_bw_Bps() * min(design.reticle_array)
+    return vol / max(bw, 1.0)
+
+
+def _dram_access_s(design: WSCDesign, wl: LLMWorkload, s: Strategy,
+                   mb_tokens: int, n_wafers: int) -> float:
+    """Weight/KV streaming beyond SRAM capacity (per microbatch, per chunk)."""
+    sram_per_chunk = (design.buffer_kb * 1024.0
+                      * design.total_cores() * n_wafers / max(s.chunks() * 1, 1))
+    w_bytes = wl.params_bytes() / max(s.pp * s.dp, 1) / max(s.tp, 1) * s.tp
+    w_bytes = wl.params_bytes() / max(s.pp, 1)           # per pipeline stage
+    kv_bytes = (wl.kv_bytes_per_layer() * wl.n_layers / max(s.pp, 1)
+                if wl.phase == "decode" else 0.0)
+    spill = max(w_bytes + kv_bytes - sram_per_chunk, 0.0)
+    if spill <= 0:
+        return 0.0
+    reticles_per_chunk = max(
+        design.n_reticles() * n_wafers / max(s.chunks(), 1), 1e-9)
+    if design.use_stacked_dram:
+        bw = design.dram_bw_Bps_per_reticle() * reticles_per_chunk
+        return spill / max(bw, 1.0)
+    # off-chip: edge memory controllers + transit over inter-reticle mesh
+    n_ctrl = 2 * (design.reticle_array[0] + design.reticle_array[1])
+    bw = n_ctrl * C.OFFCHIP_BW_PER_CTRL / max(s.chunks(), 1)
+    transit = design.inter_reticle_bw_Bps() * min(design.reticle_array) \
+        / max(s.chunks(), 1)
+    return spill / max(min(bw, transit), 1.0)
+
+
+def evaluate_step(design: WSCDesign, wl: LLMWorkload, s: Strategy,
+                  chunk_latency_cycles: float, graph: ChunkGraph,
+                  n_wafers: int, peak_power_w: Optional[float] = None
+                  ) -> StepResult:
+    """Combine op-level chunk latency with chunk-level comm/DRAM/pipeline."""
+    mb_count = s.microbatches if wl.phase == "train" else 1
+    mb_tokens = max(wl.tokens_per_step() // (s.dp * mb_count), 1)
+    layers_per_stage = max(wl.n_layers // s.pp, 1)
+
+    # --- per-microbatch stage time -----------------------------------------
+    compute_s = (chunk_latency_cycles * layers_per_stage / C.CLOCK_HZ)
+    bwd_mult = 3.0 if wl.phase == "train" else 1.0       # fwd+bwd
+    compute_s *= bwd_mult
+    tp_s = _tp_allreduce_s(design, wl, s, mb_tokens,
+                           design.total_cores() * n_wafers // max(s.chunks(), 1)
+                           ) * layers_per_stage * bwd_mult
+    pp_s = _pp_transfer_s(design, wl, s, mb_tokens) * bwd_mult
+    dram_s = _dram_access_s(design, wl, s, mb_tokens, n_wafers)
+    stage_s = compute_s + tp_s + pp_s + dram_s
+
+    # --- pipeline + step ----------------------------------------------------
+    eff = mb_count / (mb_count + s.pp - 1.0)
+    iter_s = stage_s * mb_count / eff
+    dp_s = _dp_allreduce_s(design, wl, s, n_wafers)
+    step_s = iter_s + dp_s
+    tokens = wl.tokens_per_step()
+    throughput = tokens / max(step_s, 1e-12)
+
+    # --- energy (action accounting, §VI-E) ----------------------------------
+    E = C.ENERGY
+    flops = wl.flops_per_step()
+    e_mac = flops / 2.0 * E.mac * 1e-12
+    sram_bits_layer = sum(o.tile.sram_read_bits + o.tile.sram_write_bits
+                          for o in graph.ops) * graph.n_cores
+    e_sram = (sram_bits_layer * wl.n_layers * mb_count * s.dp
+              * bwd_mult * E.sram_read_bit * 1e-12)
+    noc_bytes_layer = float(graph.link_loads.sum())
+    e_noc = (noc_bytes_layer * 8 * wl.n_layers * mb_count * s.dp * bwd_mult
+             * E.noc_bit_hop * 1e-12)
+    ir_bytes = (2.0 * (s.tp - 1) / max(s.tp, 1) * mb_tokens * wl.d_model
+                * BYTES * 2 * wl.n_layers * mb_count * s.dp * bwd_mult)
+    ir_bytes += wl.params_bytes() * 2 * (1 if s.dp > 1 else 0)
+    e_ir = ir_bytes * 8 * E.ir_bit(design.integration) * 1e-12
+    dram_bytes = max(wl.params_bytes() / max(s.pp, 1)
+                     - design.buffer_kb * 1024.0 * design.total_cores()
+                     / max(s.chunks(), 1), 0.0) * mb_count * s.dp
+    e_dram = dram_bytes * 8 * (E.dram_bit if design.use_stacked_dram
+                               else E.offchip_bit) * 1e-12
+    static_w = design.static_power_w() * n_wafers
+    energy = e_mac + e_sram + e_noc + e_ir + e_dram + static_w * step_s
+    if not (math.isfinite(step_s) and math.isfinite(energy)):
+        return StepResult(float("inf"), 0.0, float("inf"), eff, {}, 0.0,
+                          feasible=False, reason="non_finite")
+    power = energy / max(step_s, 1e-12)
+
+    limit = (peak_power_w if peak_power_w is not None
+             else C.WAFER_POWER_W * n_wafers)
+    feasible = power <= limit and math.isfinite(power)
+    return StepResult(
+        step_time_s=step_s,
+        throughput=throughput,
+        power_w=power,
+        pipeline_eff=eff,
+        breakdown={"compute": compute_s * mb_count / eff,
+                   "tp": tp_s * mb_count / eff,
+                   "pp": pp_s * mb_count / eff,
+                   "dram": dram_s * mb_count / eff,
+                   "dp": dp_s},
+        energy_j=energy,
+        feasible=feasible,
+        reason="" if feasible else "power",
+    )

@@ -1,0 +1,209 @@
+"""Workload Compiler (paper §VI-A).
+
+(1) Operator-graph generation: the LLM is segmented into model chunks by the
+    parallel strategy (TP x PP x DP); compute resources divide evenly.
+(2) Partition/allocation: each chunk's representative layer chain (uniform
+    LLM stacks) is partitioned over the chunk's 2-D core grid.
+(3) Task scheduling: ops are tiled per core (tile_eval) and inter-op
+    redistribution transfers are generated at core granularity.
+(4) Mapping & routing: logical cores map row-major onto the physical array;
+    transfers take XY routes; per-link volumes and injection rates feed the
+    op-level NoC estimators (analytical / GNN / simulator).
+
+DRAM access and inter-chunk (TP/PP/DP) communication are handled at the
+chunk level (paper §VI-D), not here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.design_space import WSCDesign
+from repro.core.tile_eval import TileResult, evaluate_tile
+from repro.core.workload import BYTES, GEMMOp, LLMWorkload
+
+
+@dataclasses.dataclass
+class OpNode:
+    op: GEMMOp
+    tile: TileResult               # per-core tile evaluation
+    grid: Tuple[int, int]          # (gh, gw) logical core grid
+
+
+@dataclasses.dataclass
+class Transfer:
+    src_op: int
+    dst_op: int
+    pairs: List[Tuple[int, int, float]]    # (src_core, dst_core, bytes)
+
+    def total_bytes(self) -> float:
+        return sum(p[2] for p in self.pairs)
+
+
+@dataclasses.dataclass
+class ChunkGraph:
+    array: Tuple[int, int]                 # physical chunk grid (H, W)
+    ops: List[OpNode]
+    transfers: List[Transfer]
+    link_loads: np.ndarray                 # (n_links,) bytes per directed link
+    link_flows: np.ndarray                 # (n_links,) flow count per link
+    link_index: Dict[Tuple[int, int], int] # (core_u, core_v) -> link id
+    n_cores: int
+    routes: Dict[Tuple[int, int], List[Tuple[int, int]]] = None  # pair->hops
+
+    def injection_rates(self, noc_bw_bits: int) -> np.ndarray:
+        """flits/cycle injected per core, averaged over the chunk runtime."""
+        total_cycles = max(sum(o.tile.cycles for o in self.ops), 1.0)
+        inj = np.zeros(self.n_cores)
+        flit_bytes = noc_bw_bits / 8.0
+        for t in self.transfers:
+            for s, _, b in t.pairs:
+                inj[s] += b / max(flit_bytes, 1.0)
+        return inj / total_cycles
+
+
+def _grid_for(n_cores: int) -> Tuple[int, int]:
+    gh = 2 ** (int(math.log2(max(n_cores, 1))) // 2)
+    return gh, max(n_cores // gh, 1)
+
+
+def _xy_route(src: int, dst: int, W: int) -> List[Tuple[int, int]]:
+    """XY (row-first) route as a list of directed core-to-core hops."""
+    r1, c1 = divmod(src, W)
+    r2, c2 = divmod(dst, W)
+    hops = []
+    c = c1
+    while c != c2:
+        nc = c + (1 if c2 > c else -1)
+        hops.append((r1 * W + c, r1 * W + nc))
+        c = nc
+    r = r1
+    while r != r2:
+        nr = r + (1 if r2 > r else -1)
+        hops.append((r * W + c2, nr * W + c2))
+        r = nr
+    return hops
+
+
+def compile_chunk(design: WSCDesign, wl: LLMWorkload, tp: int,
+                  mb_tokens: int, cores_per_chunk: int,
+                  grid_cap: int = 64) -> ChunkGraph:
+    """Compile one model chunk's representative layer onto its core region.
+
+    Hierarchical scale reduction (paper §VI): per-core tiles are sized by the
+    TRUE chunk grid (cores_per_chunk), while the NoC graph is built on a
+    capped representative grid — congestion patterns at equal per-core tile
+    size are grid-size invariant for the row-redistribution pattern."""
+    gh_t, gw_t = _grid_for(cores_per_chunk)
+    gh, gw = _grid_for(min(cores_per_chunk, grid_cap))
+    n_cores = gh * gw
+    H, W = gh, gw
+
+    ops = wl.layer_ops(tp=tp, mb_tokens=mb_tokens)
+    nodes: List[OpNode] = []
+    for op in ops:
+        # per-core tile: split M over gh_t, N over gw_t (true grid)
+        tile_gemm = GEMMOp(op.name,
+                           max(op.M // gh_t, 1), op.K, max(op.N // gw_t, 1),
+                           op.weight)
+        tr = evaluate_tile(tile_gemm, design.mac_num, design.buffer_kb,
+                           design.buffer_bw, design.dataflow)
+        nodes.append(OpNode(op, tr, (gh_t, gw_t)))
+
+    # inter-op redistribution: producer (a, b) -> consumers (a, b') in its
+    # row (the next GEMM contracts over the previous output dim, so each
+    # consumer needs the full row block = row-wise all-gather pattern)
+    transfers: List[Transfer] = []
+    link_index: Dict[Tuple[int, int], int] = {}
+    loads: List[float] = []
+    flows: List[float] = []
+    routes: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+
+    def link_id(u, v):
+        key = (u, v)
+        if key not in link_index:
+            link_index[key] = len(loads)
+            loads.append(0.0)
+            flows.append(0.0)
+        return link_index[key]
+
+    for i in range(len(nodes) - 1):
+        out_b = nodes[i].op.out_bytes()
+        # row all-gather: each producer's tile (out_b / n_cores) goes to the
+        # other gw-1 consumers in its row; total moved = (gw-1) x out_b
+        per_pair = out_b / n_cores if gw > 1 else 0.0
+        pairs = []
+        if gw > 1:
+            for a in range(gh):
+                for b in range(gw):
+                    src = a * W + b
+                    for b2 in range(gw):
+                        if b2 == b:
+                            continue
+                        dst = a * W + b2
+                        pairs.append((src, dst, per_pair))
+                        if (src, dst) not in routes:
+                            routes[(src, dst)] = _xy_route(src, dst, W)
+                        for (u, v) in routes[(src, dst)]:
+                            lid = link_id(u, v)
+                            loads[lid] += per_pair
+                            flows[lid] += 1.0
+        transfers.append(Transfer(i, i + 1, pairs))
+
+    return ChunkGraph(array=(H, W), ops=nodes, transfers=transfers,
+                      link_loads=np.array(loads), link_flows=np.array(flows),
+                      link_index=link_index, n_cores=n_cores, routes=routes)
+
+
+# ---------------------------------------------------------------------------
+# parallel strategy enumeration (paper §VI-A last paragraph)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    tp: int
+    pp: int
+    dp: int
+    microbatches: int
+
+    def chunks(self) -> int:
+        return self.pp * self.dp
+
+
+def enumerate_strategies(design: WSCDesign, wl: LLMWorkload,
+                         n_wafers: int = 1) -> List[Strategy]:
+    """All (TP, DP, PP, micro-batch) combos satisfying memory capacity
+    (paper: iterate all combinations that satisfy the memory constraint)."""
+    total_cores = design.total_cores() * n_wafers
+    sram_total = design.buffer_kb * 1024.0 * total_cores
+    dram_total = design.dram_gb_per_reticle() * 1e9 * design.n_reticles() * n_wafers
+    mem_budget = sram_total + dram_total
+    p_bytes = wl.params_bytes()
+    opt_mult = 6.0 if wl.phase == "train" else 1.0   # weights+grads+adam
+    out: List[Strategy] = []
+    pows = [2 ** i for i in range(0, 17)]
+    for pp in [p for p in pows if p <= min(wl.n_layers, 64)]:
+        for dp in [d for d in pows if d <= max(wl.batch, 1)]:
+            for tp in [t for t in pows if t <= 4096]:
+                chunks = pp * dp
+                if chunks * tp > total_cores or tp > total_cores:
+                    continue
+                # memory: dp replicas each hold params/pp (+ optimizer);
+                # the KV cache splits across replicas (constant total)
+                need = dp * p_bytes * opt_mult / max(pp, 1)
+                if wl.phase != "train":
+                    need = dp * p_bytes / max(pp, 1)
+                    need += wl.kv_bytes_per_layer() * wl.n_layers
+                if need > mem_budget:
+                    continue
+                for mb in (1, 2, 4, 8, 16, 32):
+                    if wl.phase != "train" and mb > 1:
+                        continue
+                    if wl.batch % (dp * (mb if wl.phase == "train" else 1)):
+                        continue
+                    out.append(Strategy(tp, pp, dp, mb))
+    return out or [Strategy(1, 1, 1, 1)]

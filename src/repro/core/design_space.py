@@ -1,0 +1,231 @@
+"""WSC design-space construction (paper §V, Table I).
+
+Candidate values (Table I):
+    dataflow          WS | IS | OS
+    mac_num           8 .. 4096            (per core)
+    buffer_size       32 .. 2048 KB
+    buffer_bw         32 .. 4096 bit/cycle
+    noc_bw            32 .. 4096 bit/cycle
+    inter_reticle_bw  0.2 .. 2.0 x reticle bisection bw
+    stacking_DRAM_bw  0.25 .. 4 TB/s/100mm^2 (optional)
+    stacking_DRAM sz  8 .. 40 GB (linear trade with bw)
+    integration       die_stitching | InFO-SoW
+    inter_wafer_bw    100 GB/s per network interface
+    off_chip_mem_bw   160 GB/s per memory controller
+    core/reticle arrays: 1 .. max under area constraints
+Heterogeneous params (§V-B): prefill_ratio, hetero granularity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import components as C
+
+DATAFLOWS = ("WS", "IS", "OS")
+INTEGRATIONS = ("die_stitching", "infosow")
+
+MAC_RANGE = (8, 4096)
+BUF_KB_RANGE = (32, 2048)
+BUF_BW_RANGE = (32, 4096)
+NOC_BW_RANGE = (32, 4096)
+IR_RATIO_RANGE = (0.2, 2.0)
+DRAM_BW_RANGE = C.DRAM_BW_RANGE
+
+
+@dataclasses.dataclass(frozen=True)
+class WSCDesign:
+    # core level
+    dataflow: str = "WS"
+    mac_num: int = 512
+    buffer_kb: int = 256
+    buffer_bw: int = 1024          # bits/cycle
+    noc_bw: int = 512              # bits/cycle
+    # reticle level
+    core_array: Tuple[int, int] = (8, 8)
+    inter_reticle_bw_ratio: float = 1.0
+    use_stacked_dram: bool = True
+    dram_bw_tbps_per_100mm2: float = 1.0
+    # wafer level
+    reticle_array: Tuple[int, int] = (8, 8)
+    integration: str = "infosow"
+    # heterogeneity (inference only; §V-B)
+    prefill_ratio: float = 0.5
+    hetero: str = "none"           # none | core | reticle | wafer
+    # resolved by the validator (spares needed for the yield target)
+    spares_per_row: int = 1
+
+    # ---------------- derived geometry ------------------------------------
+
+    def core_area_mm2(self) -> float:
+        return C.core_area_mm2(self.mac_num, self.buffer_kb, self.buffer_bw,
+                               self.noc_bw)
+
+    def core_dims_mm(self) -> Tuple[float, float]:
+        a = self.core_area_mm2()
+        s = math.sqrt(a)
+        return (s, s)
+
+    def cores_per_reticle(self) -> int:
+        return self.core_array[0] * self.core_array[1]
+
+    def reticle_bisection_Bps(self) -> float:
+        """Bisection bandwidth of the core-array NoC (bits/cycle -> B/s)."""
+        w = min(self.core_array)
+        return w * self.noc_bw / 8.0 * C.CLOCK_HZ
+
+    def inter_reticle_bw_Bps(self) -> float:
+        return self.inter_reticle_bw_ratio * self.reticle_bisection_Bps()
+
+    def reticle_compute_area_mm2(self) -> float:
+        h, w = self.core_array
+        spare_cols = self.spares_per_row
+        return (w + spare_cols) * h * self.core_area_mm2()
+
+    def dram_bw_Bps_per_reticle(self) -> float:
+        if not self.use_stacked_dram:
+            return 0.0
+        return (self.dram_bw_tbps_per_100mm2 * 1e12
+                * self.reticle_area_mm2() / 100.0)
+
+    def dram_gb_per_reticle(self) -> float:
+        if not self.use_stacked_dram:
+            return 0.0
+        return (C.dram_gb_at_bw(self.dram_bw_tbps_per_100mm2)
+                * self.reticle_area_mm2() / 100.0)
+
+    def tsv_area_mm2(self) -> float:
+        if not self.use_stacked_dram:
+            return 0.0
+        return C.tsv_area_mm2(self.dram_bw_Bps_per_reticle())
+
+    def reticle_area_mm2(self) -> float:
+        """Compute + inter-reticle PHY + TSV keep-out."""
+        phy = C.inter_reticle_area_mm2(
+            4 * self.inter_reticle_bw_Bps(), self.integration)
+        # TSV area depends on reticle area (bw per mm^2): solve fixed point
+        base = self.reticle_compute_area_mm2() + phy
+        if not self.use_stacked_dram:
+            return base
+        ratio = (self.dram_bw_tbps_per_100mm2 * 1e12 / 100.0) * 8.0 \
+            / (C.TSV_GBPS * 1e9) * (C.TSV_PITCH_UM * 1e-3) ** 2
+        return base / max(1.0 - ratio, 1e-3)
+
+    def n_reticles(self) -> int:
+        return self.reticle_array[0] * self.reticle_array[1]
+
+    def wafer_area_mm2(self) -> float:
+        return self.n_reticles() * self.reticle_area_mm2()
+
+    def total_cores(self) -> int:
+        return self.cores_per_reticle() * self.n_reticles()
+
+    def core_flops(self) -> float:
+        return C.core_peak_flops(self.mac_num)
+
+    def reticle_flops(self) -> float:
+        return self.core_flops() * self.cores_per_reticle()
+
+    def wafer_flops(self) -> float:
+        return self.reticle_flops() * self.n_reticles()
+
+    def sram_per_reticle_bytes(self) -> float:
+        return self.cores_per_reticle() * self.buffer_kb * 1024.0
+
+    def static_power_w(self) -> float:
+        per_core = C.core_static_w(self.mac_num, self.buffer_kb)
+        dram = (C.DRAM_STATIC_W_PER_GB * self.dram_gb_per_reticle()
+                * self.n_reticles())
+        return per_core * self.total_cores() + dram
+
+    def describe(self) -> str:
+        return (f"{self.dataflow} mac={self.mac_num} buf={self.buffer_kb}KB "
+                f"bw={self.buffer_bw}/{self.noc_bw}b "
+                f"cores={self.core_array} ret={self.reticle_array} "
+                f"ir={self.inter_reticle_bw_ratio:.2f}x "
+                f"dram={'%.2fTB/s' % self.dram_bw_tbps_per_100mm2 if self.use_stacked_dram else 'off'} "
+                f"{self.integration}")
+
+
+# ---------------------------------------------------------------------------
+# sampling / encoding for the explorer
+# ---------------------------------------------------------------------------
+
+# normalized [0,1]^d encoding: log-scaled for the exponential-range knobs
+DIMS = ("dataflow", "mac", "buf_kb", "buf_bw", "noc_bw", "core_h", "core_w",
+        "ir_ratio", "dram_on", "dram_bw", "ret_h", "ret_w", "integration")
+
+
+def _log_scale(u: float, lo: float, hi: float) -> float:
+    return lo * (hi / lo) ** u
+
+
+def _log_unscale(v: float, lo: float, hi: float) -> float:
+    return math.log(v / lo) / math.log(hi / lo)
+
+
+def _pow2(v: float, lo: int, hi: int) -> int:
+    p = int(round(math.log2(max(v, lo))))
+    return int(min(max(2 ** p, lo), hi))
+
+
+def decode(u: np.ndarray, max_core_dim: int = 32, max_ret_dim: int = 12
+           ) -> WSCDesign:
+    """[0,1]^13 -> WSCDesign (nearest feasible grid values)."""
+    u = np.clip(np.asarray(u, dtype=np.float64), 0.0, 1.0)
+    return WSCDesign(
+        dataflow=DATAFLOWS[min(int(u[0] * 3), 2)],
+        mac_num=_pow2(_log_scale(u[1], *MAC_RANGE), *MAC_RANGE),
+        buffer_kb=_pow2(_log_scale(u[2], *BUF_KB_RANGE), *BUF_KB_RANGE),
+        buffer_bw=_pow2(_log_scale(u[3], *BUF_BW_RANGE), *BUF_BW_RANGE),
+        noc_bw=_pow2(_log_scale(u[4], *NOC_BW_RANGE), *NOC_BW_RANGE),
+        core_array=(1 + int(u[5] * (max_core_dim - 1) + 0.5),
+                    1 + int(u[6] * (max_core_dim - 1) + 0.5)),
+        inter_reticle_bw_ratio=round(
+            IR_RATIO_RANGE[0] + u[7] * (IR_RATIO_RANGE[1] - IR_RATIO_RANGE[0]), 2),
+        use_stacked_dram=bool(u[8] >= 0.5),
+        dram_bw_tbps_per_100mm2=round(
+            _log_scale(u[9], *DRAM_BW_RANGE), 3),
+        reticle_array=(1 + int(u[10] * (max_ret_dim - 1) + 0.5),
+                       1 + int(u[11] * (max_ret_dim - 1) + 0.5)),
+        integration=INTEGRATIONS[min(int(u[12] * 2), 1)],
+    )
+
+
+def encode(d: WSCDesign, max_core_dim: int = 32, max_ret_dim: int = 12
+           ) -> np.ndarray:
+    return np.array([
+        DATAFLOWS.index(d.dataflow) / 2.0,
+        _log_unscale(d.mac_num, *MAC_RANGE),
+        _log_unscale(d.buffer_kb, *BUF_KB_RANGE),
+        _log_unscale(d.buffer_bw, *BUF_BW_RANGE),
+        _log_unscale(d.noc_bw, *NOC_BW_RANGE),
+        (d.core_array[0] - 1) / (max_core_dim - 1),
+        (d.core_array[1] - 1) / (max_core_dim - 1),
+        (d.inter_reticle_bw_ratio - IR_RATIO_RANGE[0])
+        / (IR_RATIO_RANGE[1] - IR_RATIO_RANGE[0]),
+        1.0 if d.use_stacked_dram else 0.0,
+        _log_unscale(d.dram_bw_tbps_per_100mm2, *DRAM_BW_RANGE),
+        (d.reticle_array[0] - 1) / (max_ret_dim - 1),
+        (d.reticle_array[1] - 1) / (max_ret_dim - 1),
+        0.0 if d.integration == INTEGRATIONS[0] else 1.0,
+    ])
+
+
+def sample(rng: np.random.Generator, n: int) -> np.ndarray:
+    """n raw points in [0,1]^13 (validator filters infeasible decodes)."""
+    return rng.random((n, len(DIMS)))
+
+
+def space_size_estimate() -> float:
+    """Cardinality of the discrete grid (paper quotes ~8.4e14 feasible)."""
+    return (3                      # dataflow
+            * 10 * 7 * 8 * 8       # mac, buf, buf_bw, noc_bw (pow2 steps)
+            * 32 * 32              # core array
+            * 19                   # ir ratio grid 0.2..2.0 step .1
+            * (1 + 13)             # dram off / bw grid
+            * 12 * 12              # reticle array
+            * 2)                   # integration

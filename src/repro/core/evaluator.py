@@ -1,0 +1,107 @@
+"""Hierarchical Evaluation Engine (paper §VI, Fig. 6).
+
+evaluate_design(design, workload, fidelity) walks tile -> op -> chunk level
+and searches the parallel-strategy space (TP x DP x PP x micro-batch),
+returning the best-throughput feasible (throughput, power) point.
+
+Fidelities (paper §VII: f1 = analytical, f0 = GNN; CA-sim for validation):
+    "analytical"  fast equivalent-bandwidth NoC model
+    "gnn"         GNN congestion model (needs trained params)
+    "sim"         cycle-approximate NoC simulator (ground truth, slow)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import components as C
+from repro.core.chunk_eval import StepResult, evaluate_step
+from repro.core.compiler import (
+    ChunkGraph,
+    Strategy,
+    compile_chunk,
+    enumerate_strategies,
+)
+from repro.core.design_space import WSCDesign
+from repro.core.noc_analytical import chunk_latency_cycles
+from repro.core.noc_gnn import chunk_latency_cycles_gnn
+from repro.core.noc_sim import chunk_latency_cycles_sim
+from repro.core.workload import LLMWorkload
+
+H100_AREA_MM2 = 814.0
+
+
+@dataclasses.dataclass
+class EvalResult:
+    throughput: float
+    power_w: float
+    strategy: Optional[Strategy]
+    step: Optional[StepResult]
+    n_wafers: int
+    feasible: bool
+    reason: str = ""
+
+
+def wafers_for_budget(design: WSCDesign, wl: LLMWorkload) -> int:
+    """Area-matched system size: same total silicon as the GPU baseline
+    (paper: 'total area of the WSCs consistent with the corresponding number
+    of GPUs')."""
+    total = wl.gpu_budget * H100_AREA_MM2
+    return max(1, round(total / max(design.wafer_area_mm2(), 1.0)))
+
+
+def _strategy_order(s: Strategy) -> Tuple:
+    # prefer modest TP, deep pipelines last; purely a search-order heuristic
+    return (abs(math.log2(max(s.tp, 1)) - 5), s.pp, -s.microbatches)
+
+
+def evaluate_design(design: WSCDesign, wl: LLMWorkload,
+                    fidelity: str = "analytical",
+                    gnn_params: Optional[Dict] = None,
+                    n_wafers: Optional[int] = None,
+                    max_strategies: int = 24) -> EvalResult:
+    nw = n_wafers if n_wafers is not None else wafers_for_budget(design, wl)
+    strategies = enumerate_strategies(design, wl, n_wafers=nw)
+    strategies = sorted(strategies, key=_strategy_order)[:max_strategies]
+
+    compile_cache: Dict[Tuple[int, int, int], Tuple[ChunkGraph, float]] = {}
+    best: Optional[EvalResult] = None
+    for s in strategies:
+        mb_count = s.microbatches if wl.phase == "train" else 1
+        mb_tokens = max(wl.tokens_per_step() // (s.dp * mb_count), 1)
+        cores_per_chunk = max(design.total_cores() * nw // s.chunks(), 1)
+        key = (s.tp, mb_tokens, cores_per_chunk)
+        if key not in compile_cache:
+            graph = compile_chunk(design, wl, s.tp, mb_tokens,
+                                  cores_per_chunk)
+            if fidelity == "sim":
+                lat = chunk_latency_cycles_sim(graph, design)
+            elif fidelity == "gnn" and gnn_params is not None:
+                lat = chunk_latency_cycles_gnn(gnn_params, graph, design)
+            else:
+                lat = chunk_latency_cycles(graph, design)
+            compile_cache[key] = (graph, lat)
+        graph, lat = compile_cache[key]
+        step = evaluate_step(design, wl, s, lat, graph, nw)
+        if not step.feasible:
+            continue
+        cand = EvalResult(step.throughput, step.power_w, s, step, nw, True)
+        if best is None or cand.throughput > best.throughput:
+            best = cand
+    if best is None:
+        return EvalResult(0.0, float("inf"), None, None, nw, False,
+                          "no_feasible_strategy")
+    return best
+
+
+def evaluate_objectives(design: WSCDesign, wl: LLMWorkload,
+                        fidelity: str = "analytical",
+                        gnn_params: Optional[Dict] = None
+                        ) -> Tuple[float, float]:
+    """(throughput, power) pair for the explorer; infeasible -> (0, peak)."""
+    r = evaluate_design(design, wl, fidelity=fidelity, gnn_params=gnn_params)
+    if not r.feasible:
+        return 0.0, C.WAFER_POWER_W
+    return r.throughput, r.power_w / max(r.n_wafers, 1)

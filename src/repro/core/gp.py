@@ -1,0 +1,91 @@
+"""Gaussian-process surrogate in pure JAX (paper §VII: GP surrogates per
+fidelity). Matern-5/2 ARD kernel, Cholesky posterior, marginal-likelihood
+hyperparameter fit by Adam on (lengthscales, signal, noise).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class GPParams:
+    log_ls: jnp.ndarray        # (d,)
+    log_sf: jnp.ndarray        # ()
+    log_noise: jnp.ndarray     # ()
+
+
+def _matern52(x1, x2, ls, sf):
+    d = jnp.sqrt(jnp.maximum(
+        jnp.sum(((x1[:, None, :] - x2[None, :, :]) / ls) ** 2, -1), 1e-12))
+    s5 = jnp.sqrt(5.0) * d
+    return sf * (1 + s5 + 5.0 * d * d / 3.0) * jnp.exp(-s5)
+
+
+def _nll(raw, X, y):
+    ls = jnp.exp(raw["log_ls"])
+    sf = jnp.exp(raw["log_sf"])
+    noise = jnp.exp(raw["log_noise"]) + 1e-6
+    K = _matern52(X, X, ls, sf) + noise * jnp.eye(len(X))
+    L = jnp.linalg.cholesky(K)
+    a = jax.scipy.linalg.cho_solve((L, True), y)
+    return (0.5 * y @ a + jnp.sum(jnp.log(jnp.diag(L)))
+            + 0.5 * len(X) * jnp.log(2 * jnp.pi))
+
+
+@dataclasses.dataclass
+class GP:
+    X: np.ndarray
+    y: np.ndarray
+    params: dict
+    mean: float
+    std: float
+    chol: np.ndarray
+    alpha: np.ndarray
+
+    @staticmethod
+    def fit(X: np.ndarray, y: np.ndarray, iters: int = 80,
+            lr: float = 0.05, seed: int = 0) -> "GP":
+        X = jnp.asarray(X, jnp.float64) if False else jnp.asarray(X, jnp.float32)
+        mean, std = float(np.mean(y)), float(np.std(y) + 1e-9)
+        yn = jnp.asarray((np.asarray(y) - mean) / std, jnp.float32)
+        d = X.shape[1]
+        raw = {"log_ls": jnp.zeros(d) + jnp.log(0.3),
+               "log_sf": jnp.asarray(0.0),
+               "log_noise": jnp.asarray(jnp.log(0.05))}
+        grad_fn = jax.jit(jax.value_and_grad(lambda r: _nll(r, X, yn)))
+        m = jax.tree.map(jnp.zeros_like, raw)
+        v = jax.tree.map(jnp.zeros_like, raw)
+        for t in range(1, iters + 1):
+            val, g = grad_fn(raw)
+            if not np.isfinite(float(val)):
+                break
+            m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+            v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+            raw = jax.tree.map(
+                lambda p, m_, v_: p - lr * (m_ / (1 - 0.9 ** t))
+                / (jnp.sqrt(v_ / (1 - 0.999 ** t)) + 1e-8), raw, m, v)
+        ls = jnp.exp(raw["log_ls"])
+        sf = jnp.exp(raw["log_sf"])
+        noise = jnp.exp(raw["log_noise"]) + 1e-6
+        K = _matern52(X, X, ls, sf) + noise * jnp.eye(len(X))
+        L = np.asarray(jnp.linalg.cholesky(K))
+        alpha = np.asarray(jax.scipy.linalg.cho_solve((jnp.asarray(L), True), yn))
+        return GP(np.asarray(X), np.asarray(yn), jax.tree.map(np.asarray, raw),
+                  mean, std, L, alpha)
+
+    def predict(self, Xs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Posterior mean/std at Xs (de-normalized)."""
+        ls = np.exp(self.params["log_ls"])
+        sf = np.exp(self.params["log_sf"])
+        Ks = np.asarray(_matern52(jnp.asarray(Xs, jnp.float32),
+                                  jnp.asarray(self.X), jnp.asarray(ls),
+                                  jnp.asarray(sf)))
+        mu = Ks @ self.alpha
+        v = np.linalg.solve(self.chol, Ks.T)
+        var = np.maximum(sf - np.sum(v * v, axis=0), 1e-10)
+        return mu * self.std + self.mean, np.sqrt(var) * self.std

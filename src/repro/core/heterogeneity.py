@@ -1,0 +1,101 @@
+"""Heterogeneous WSC modeling for LLM inference (paper §V-B, §IX-E).
+
+prefill_ratio splits compute resources between the prefill and decode
+stages; `hetero` granularity sets where the split lives and what the
+KV-cache transfer between stages costs:
+
+    core     same reticle, software-scheduled      -> NoC bisection
+    reticle  different reticles, one wafer          -> inter-reticle links
+    wafer    different wafers                       -> inter-wafer NIs
+
+Overall throughput = matched-rate pipeline of the two stages including the
+KV transfer; each stage's design can tune its stacking-DRAM bandwidth
+independently (reticle/wafer granularity) per the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.core import components as C
+from repro.core.design_space import WSCDesign
+from repro.core.evaluator import evaluate_design
+from repro.core.workload import LLMWorkload, inference_workload
+
+
+@dataclasses.dataclass
+class HeteroResult:
+    throughput: float           # tokens/s end-to-end
+    power_w: float
+    prefill_tps: float
+    decode_tps: float
+    kv_transfer_s: float
+    granularity: str
+
+
+def _kv_transfer_bw(design: WSCDesign, granularity: str) -> float:
+    if granularity == "core":
+        return design.reticle_bisection_Bps()
+    if granularity == "reticle":
+        # stage boundary crosses the wafer's inter-reticle bisection
+        return design.inter_reticle_bw_Bps() * min(design.reticle_array)
+    # wafer-level: KV leaves through the facing edge's network interfaces
+    # at protocol-achievable utilization — the paper's inter-wafer
+    # bottleneck (§IX-E)
+    n_ni = design.reticle_array[0]
+    return 0.5 * n_ni * C.INTER_WAFER_BW_PER_NI
+
+
+def evaluate_hetero(design_prefill: WSCDesign, design_decode: WSCDesign,
+                    wl_base: LLMWorkload, granularity: str,
+                    prefill_ratio: float, out_tokens: int = 2048,
+                    n_wafers: int = 1, fidelity: str = "analytical",
+                    gnn_params: Optional[Dict] = None) -> HeteroResult:
+    """Evaluate a prefill/decode split. At core/reticle granularity both
+    stages share the wafer (resource fractions); at wafer granularity each
+    stage gets whole wafers."""
+    wl_p = inference_workload(wl_base, "prefill", batch=wl_base.batch,
+                              seq=wl_base.seq)
+    wl_d = inference_workload(wl_base, "decode", batch=wl_base.batch,
+                              seq=wl_base.seq)
+
+    if granularity == "wafer":
+        nw_p = max(1, round(n_wafers * prefill_ratio))
+        nw_d = max(1, n_wafers - nw_p)
+        rp = evaluate_design(design_prefill, wl_p, fidelity, gnn_params,
+                             n_wafers=nw_p)
+        rd = evaluate_design(design_decode, wl_d, fidelity, gnn_params,
+                             n_wafers=nw_d)
+        scale_p = scale_d = 1.0
+    else:
+        rp = evaluate_design(design_prefill, wl_p, fidelity, gnn_params,
+                             n_wafers=n_wafers)
+        rd = evaluate_design(design_decode, wl_d, fidelity, gnn_params,
+                             n_wafers=n_wafers)
+        scale_p, scale_d = prefill_ratio, 1.0 - prefill_ratio
+
+    # prefill produces prompts (seq tokens each); decode consumes them,
+    # emitting out_tokens per prompt
+    prefill_prompts_s = rp.throughput * scale_p / max(wl_base.seq, 1)
+    decode_tokens_s = rd.throughput * scale_d
+    decode_prompts_s = decode_tokens_s / max(out_tokens, 1)
+
+    # KV transfer between stages per prompt
+    kv_bytes = wl_base.kv_bytes_per_layer() * wl_base.n_layers / max(
+        wl_base.batch, 1)
+    bw = _kv_transfer_bw(design_decode, granularity)
+    kv_s_per_prompt = kv_bytes / max(bw, 1.0)
+    kv_prompts_s = 1.0 / max(kv_s_per_prompt, 1e-12)
+
+    # core-level heterogeneity: flexible scheduling boosts utilization but
+    # adds intra-reticle traffic + control overhead (paper §IX-E)
+    eff = {"core": 0.92, "reticle": 1.0, "wafer": 1.0}[granularity]
+    prompts_s = eff * min(prefill_prompts_s, decode_prompts_s, kv_prompts_s)
+    thpt = prompts_s * out_tokens
+    power = rp.power_w * scale_p + rd.power_w * scale_d
+    return HeteroResult(
+        throughput=thpt, power_w=power,
+        prefill_tps=rp.throughput * scale_p,
+        decode_tps=decode_tokens_s,
+        kv_transfer_s=kv_s_per_prompt,
+        granularity=granularity)

@@ -1,0 +1,185 @@
+"""Multi-Fidelity Multi-Objective Bayesian Optimization — paper Algorithm 1.
+
+Two evaluation fidelities (f1 = analytical, f0 = GNN-based — paper §VII
+notes CA simulation is kept out of the loop for cost), GP surrogates per
+(fidelity x objective), EHVI acquisition with hypervolume reference
+(throughput 0, peak power). The schedule:
+
+    iterations [0, N1-d1):            evaluate f1, acquire with M1
+    iterations [N1-d1, N1-d1+k):      evaluate f0, acquire with M1 (handover)
+    iterations [N1-d1+k, ...):        evaluate f0, acquire with M0
+
+Baselines for Fig. 8: random search and single-fidelity MOBO.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.design_space import WSCDesign, decode, sample
+from repro.core.ehvi import ehvi_2d
+from repro.core.gp import GP
+from repro.core.pareto import hypervolume_2d, pareto_front, to_max_space
+from repro.core.validator import validate
+
+EvalFn = Callable[[WSCDesign], Tuple[float, float]]   # -> (throughput, power)
+
+
+@dataclasses.dataclass
+class Trace:
+    xs: List[np.ndarray]
+    designs: List[WSCDesign]
+    ys: List[Tuple[float, float]]         # (throughput, power)
+    hv: List[float]                       # hypervolume after each iteration
+    wall_s: List[float]
+
+    def points_max(self) -> np.ndarray:
+        t = np.array([y[0] for y in self.ys])
+        p = np.array([y[1] for y in self.ys])
+        return to_max_space(t, p)
+
+    def pareto(self) -> np.ndarray:
+        return pareto_front(self.points_max())
+
+
+def _valid_candidates(rng: np.random.Generator, n: int,
+                      max_tries: int = 8) -> Tuple[np.ndarray, List[WSCDesign]]:
+    xs, ds = [], []
+    for _ in range(max_tries):
+        for u in sample(rng, n):
+            d = decode(u)
+            r = validate(d)
+            if r.ok:
+                xs.append(u)
+                ds.append(r.design)
+            if len(xs) >= n:
+                return np.array(xs), ds
+    return np.array(xs), ds
+
+
+def _fit_models(X: np.ndarray, Y: np.ndarray) -> Tuple[GP, GP]:
+    g_t = GP.fit(X, np.log1p(np.maximum(Y[:, 0], 0.0)))
+    g_p = GP.fit(X, -np.log(np.maximum(Y[:, 1], 1.0)))
+    return g_t, g_p
+
+
+def _acquire(models: Tuple[GP, GP], cand_x: np.ndarray,
+             evaluated: np.ndarray, ref: np.ndarray) -> int:
+    g_t, g_p = models
+    mu_t, s_t = g_t.predict(cand_x)
+    mu_p, s_p = g_p.predict(cand_x)
+    mu = np.stack([mu_t, mu_p], 1)
+    sg = np.stack([s_t, s_p], 1)
+    front = pareto_front(evaluated) if len(evaluated) else np.zeros((0, 2))
+    scores = ehvi_2d(mu, sg, front, ref)
+    return int(np.argmax(scores))
+
+
+def _obj_space(ys: List[Tuple[float, float]]) -> np.ndarray:
+    """(log throughput, -log power) — the space GPs and HV operate in."""
+    t = np.log1p(np.maximum(np.array([y[0] for y in ys]), 0.0))
+    p = -np.log(np.maximum(np.array([y[1] for y in ys]), 1.0))
+    return np.stack([t, p], 1)
+
+
+def _hv_ref(peak_power: float) -> np.ndarray:
+    return np.array([0.0, -np.log(max(peak_power, 1.0))])
+
+
+def run_mfmobo(f0: EvalFn, f1: EvalFn, *, d0: int = 3, d1: int = 3,
+               k: int = 5, N0: int = 20, N1: int = 30,
+               peak_power: float = 15000.0, n_candidates: int = 256,
+               seed: int = 0) -> Trace:
+    rng = np.random.default_rng(seed)
+    ref = _hv_ref(peak_power)
+    tr = Trace([], [], [], [], [])
+
+    X0, Y0, X1, Y1 = [], [], [], []
+
+    def record(x, d, y):
+        tr.xs.append(x)
+        tr.designs.append(d)
+        tr.ys.append(y)
+        pts = _obj_space(tr.ys)
+        tr.hv.append(hypervolume_2d(pts, ref))
+        tr.wall_s.append(time.time())
+
+    # priors
+    init_x, init_d = _valid_candidates(rng, d0 + d1)
+    for i in range(d1):
+        y = f1(init_d[i])
+        X1.append(init_x[i]); Y1.append(y)
+    for i in range(d1, d1 + d0):
+        y = f0(init_d[i])
+        X0.append(init_x[i]); Y0.append(y)
+        record(init_x[i], init_d[i], y)
+
+    total = N0 + N1 - d0 - d1
+    use_f0 = False
+    use_m0 = False
+    for i in range(total):
+        if i == N1 - d1:
+            use_f0 = True
+        if i == N1 - d1 + k:
+            use_m0 = True
+        cand_x, cand_d = _valid_candidates(rng, n_candidates)
+        if use_m0 and len(X0) >= 2:
+            models = _fit_models(np.array(X0), np.array(Y0))
+            ev = _obj_space(Y0)
+        else:
+            models = _fit_models(np.array(X1), np.array(Y1))
+            ev = _obj_space(Y1) if not use_f0 or not Y0 else _obj_space(Y0)
+        j = _acquire(models, cand_x, ev, ref)
+        x, d = cand_x[j], cand_d[j]
+        if use_f0:
+            y = f0(d)
+            X0.append(x); Y0.append(y)
+            record(x, d, y)
+        else:
+            y = f1(d)
+            X1.append(x); Y1.append(y)
+    return tr
+
+
+def run_mobo(f0: EvalFn, *, d0: int = 6, N: int = 20,
+             peak_power: float = 15000.0, n_candidates: int = 256,
+             seed: int = 0) -> Trace:
+    """Single-fidelity MOBO baseline (paper Fig. 8)."""
+    rng = np.random.default_rng(seed)
+    ref = _hv_ref(peak_power)
+    tr = Trace([], [], [], [], [])
+    X, Y = [], []
+    init_x, init_d = _valid_candidates(rng, d0)
+    for i in range(len(init_x)):
+        y = f0(init_d[i])
+        X.append(init_x[i]); Y.append(y)
+        tr.xs.append(init_x[i]); tr.designs.append(init_d[i]); tr.ys.append(y)
+        tr.hv.append(hypervolume_2d(_obj_space(tr.ys), ref))
+        tr.wall_s.append(time.time())
+    for i in range(N - d0):
+        models = _fit_models(np.array(X), np.array(Y))
+        cand_x, cand_d = _valid_candidates(rng, n_candidates)
+        j = _acquire(models, cand_x, _obj_space(Y), ref)
+        y = f0(cand_d[j])
+        X.append(cand_x[j]); Y.append(y)
+        tr.xs.append(cand_x[j]); tr.designs.append(cand_d[j]); tr.ys.append(y)
+        tr.hv.append(hypervolume_2d(_obj_space(tr.ys), ref))
+        tr.wall_s.append(time.time())
+    return tr
+
+
+def run_random(f0: EvalFn, *, N: int = 20, peak_power: float = 15000.0,
+               seed: int = 0) -> Trace:
+    rng = np.random.default_rng(seed)
+    ref = _hv_ref(peak_power)
+    tr = Trace([], [], [], [], [])
+    xs, ds = _valid_candidates(rng, N)
+    for x, d in zip(xs, ds):
+        y = f0(d)
+        tr.xs.append(x); tr.designs.append(d); tr.ys.append(y)
+        tr.hv.append(hypervolume_2d(_obj_space(tr.ys), ref))
+        tr.wall_s.append(time.time())
+    return tr

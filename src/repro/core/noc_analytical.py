@@ -1,0 +1,46 @@
+"""Op-level analytical NoC model (paper §VI-C, low fidelity / f1).
+
+Per-link volumes from the Workload Compiler -> equivalent bandwidth per link
+(noc_bw / #flows sharing it) -> per-edge communication delay -> chunk latency
+as the longest path over the (chain-structured) logic core graph in
+topological order. DRAM access + inter-chunk sync belong to chunk_eval.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.compiler import ChunkGraph, _xy_route
+from repro.core.design_space import WSCDesign
+
+
+def transfer_delays(graph: ChunkGraph, design: WSCDesign) -> List[float]:
+    """Per-transfer communication delay in cycles (equivalent-bandwidth)."""
+    flows = graph.link_flows
+    bw_bytes = design.noc_bw / 8.0          # bytes per cycle per link
+    W = graph.array[1]
+    delays = []
+    for t in graph.transfers:
+        worst = 0.0
+        for s, d, b in t.pairs:
+            eq_bw = bw_bytes
+            hops = graph.routes.get((s, d)) or _xy_route(s, d, W)
+            for hop in hops:
+                f = max(flows[graph.link_index[hop]], 1.0)
+                eq_bw = min(eq_bw, bw_bytes / f)
+            pair_cycles = b / max(eq_bw, 1e-9) + len(hops)
+            worst = max(worst, pair_cycles)
+        delays.append(worst)
+    return delays
+
+
+def chunk_latency_cycles(graph: ChunkGraph, design: WSCDesign) -> float:
+    """Longest path over the chain: node compute + edge comm delays."""
+    comm = transfer_delays(graph, design)
+    total = 0.0
+    for i, node in enumerate(graph.ops):
+        total += node.tile.cycles
+        if i < len(comm):
+            total += comm[i]
+    return total

@@ -1,0 +1,232 @@
+"""GNN-based NoC congestion model (paper §VI-C, Eq. 5-6), pure JAX.
+
+Input: the core-topology graph from the Workload Compiler — nodes = routers
+(feature: packet injection rate), directed edges = physical links (feature:
+transmission volume in flits, link bandwidth). Message passing runs on BOTH
+the graph and its reverse (upstream contention + downstream backpressure,
+after Noception [30]) for T iterations; the congestion head predicts each
+link's average channel waiting time:
+
+    y_e = MLP(concat(h_u^T, h_v^T, h_e^0))                      (Eq. 5)
+    t(k) = k + sum_{l in route} y_l                             (Eq. 6)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compiler import ChunkGraph, _xy_route
+from repro.core.design_space import WSCDesign
+from repro.core.noc_sim import packets_for_transfer, simulate
+
+HIDDEN = 32
+T_ITERS = 3
+NODE_F = 3      # injection rate, out-degree, in-degree
+EDGE_F = 3      # log flits, bandwidth (norm), flows
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+def _mlp_init(key, sizes):
+    ks = jax.random.split(key, len(sizes) - 1)
+    return [{"w": jax.random.normal(k, (a, b)) * (2.0 / a) ** 0.5,
+             "b": jnp.zeros(b)}
+            for k, a, b in zip(ks, sizes[:-1], sizes[1:])]
+
+
+def _mlp(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_gnn(key) -> Dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "node_enc": _mlp_init(ks[0], (NODE_F, HIDDEN, HIDDEN)),
+        "edge_enc": _mlp_init(ks[1], (EDGE_F, HIDDEN, HIDDEN)),
+        "msg_fwd": _mlp_init(ks[2], (2 * HIDDEN, HIDDEN)),
+        "msg_bwd": _mlp_init(ks[3], (2 * HIDDEN, HIDDEN)),
+        "update": _mlp_init(ks[4], (3 * HIDDEN, HIDDEN, HIDDEN)),
+        "head": _mlp_init(ks[5], (3 * HIDDEN, HIDDEN, 1)),
+    }
+
+
+def gnn_logits(params: Dict, node_x: jnp.ndarray, edge_x: jnp.ndarray,
+               senders: jnp.ndarray, receivers: jnp.ndarray,
+               n_nodes: int) -> jnp.ndarray:
+    """Raw head output = predicted log1p(waiting time) per edge — the model
+    regresses in log space, which conditions training across the 4-decade
+    range of waiting times."""
+    h_v = _mlp(params["node_enc"], node_x)
+    h_e0 = _mlp(params["edge_enc"], edge_x)
+    h_e = h_e0
+    for _ in range(T_ITERS):
+        m_in = _mlp(params["msg_fwd"],
+                    jnp.concatenate([h_v[senders], h_e], axis=-1))
+        agg_in = jax.ops.segment_sum(m_in, receivers, n_nodes)
+        m_out = _mlp(params["msg_bwd"],
+                     jnp.concatenate([h_v[receivers], h_e], axis=-1))
+        agg_out = jax.ops.segment_sum(m_out, senders, n_nodes)
+        h_v = _mlp(params["update"],
+                   jnp.concatenate([h_v, agg_in, agg_out], axis=-1))
+    y = _mlp(params["head"],
+             jnp.concatenate([h_v[senders], h_v[receivers], h_e0], axis=-1))
+    return y[:, 0]
+
+
+def gnn_forward(params: Dict, node_x: jnp.ndarray, edge_x: jnp.ndarray,
+                senders: jnp.ndarray, receivers: jnp.ndarray,
+                n_nodes: int) -> jnp.ndarray:
+    """Predicted average waiting time per edge (>= 0), Eq. 5. The log-space
+    head is clipped at 30 (~1e13 cycles) so an out-of-distribution input
+    can't overflow expm1 into inf/NaN downstream."""
+    z = gnn_logits(params, node_x, edge_x, senders, receivers, n_nodes)
+    return jnp.expm1(jnp.clip(jax.nn.relu(z), 0.0, 30.0))
+
+
+# ---------------------------------------------------------------------------
+# graph featurization from a compiled chunk
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LinkGraph:
+    node_x: np.ndarray
+    edge_x: np.ndarray
+    senders: np.ndarray
+    receivers: np.ndarray
+    links: List[Tuple[int, int]]
+    n_nodes: int
+    target: np.ndarray = None     # per-edge avg wait (from noc_sim)
+
+
+def featurize_transfer(graph: ChunkGraph, design: WSCDesign, t_idx: int,
+                       with_target: bool = False) -> LinkGraph:
+    W = graph.array[1]
+    n = graph.n_cores
+    pkts = packets_for_transfer(graph, design, t_idx)
+
+    link_flits: Dict[Tuple[int, int], float] = {}
+    link_flows: Dict[Tuple[int, int], int] = {}
+    inj = np.zeros(n)
+    for p in pkts:
+        inj[p.src] += p.flits
+        for hop in _xy_route(p.src, p.dst, W):
+            link_flits[hop] = link_flits.get(hop, 0.0) + p.flits
+            link_flows[hop] = link_flows.get(hop, 0) + 1
+    links = sorted(link_flits)
+    senders = np.array([u for u, _ in links], np.int32)
+    receivers = np.array([v for _, v in links], np.int32)
+
+    dur = max(graph.ops[graph.transfers[t_idx].src_op].tile.cycles, 1.0)
+    out_deg = np.zeros(n)
+    in_deg = np.zeros(n)
+    for u, v in links:
+        out_deg[u] += 1
+        in_deg[v] += 1
+    node_x = np.stack([inj / dur, out_deg / 4.0, in_deg / 4.0], axis=1)
+    edge_x = np.stack([
+        np.log1p([link_flits[l] for l in links]),
+        np.full(len(links), design.noc_bw / 4096.0),
+        np.log1p([link_flows[l] for l in links]),
+    ], axis=1)
+
+    target = None
+    if with_target:
+        res = simulate(pkts, W)
+        target = np.array([res.link_wait.get(l, 0.0) for l in links])
+    return LinkGraph(node_x.astype(np.float32), edge_x.astype(np.float32),
+                     senders, receivers, links, n, target)
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+
+def train_gnn(params: Dict, dataset: List[LinkGraph], epochs: int = 60,
+              lr: float = 3e-3, seed: int = 0) -> Tuple[Dict, List[float]]:
+    """Full-batch-per-graph Adam on log1p(wait) MSE."""
+
+    def loss_one(p, node_x, edge_x, senders, receivers, target, n_nodes):
+        z = gnn_logits(p, node_x, edge_x, senders, receivers, n_nodes)
+        tgt = jnp.log1p(target)
+        return jnp.mean((z - tgt) ** 2)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_one), static_argnums=(6,))
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    losses = []
+    step = 0
+    rng = np.random.default_rng(seed)
+    for ep in range(epochs):
+        order = rng.permutation(len(dataset))
+        ep_loss = 0.0
+        for gi in order:
+            g = dataset[gi]
+            if g.target is None or len(g.links) == 0:
+                continue
+            step += 1
+            lval, grads = grad_fn(params, jnp.asarray(g.node_x),
+                                  jnp.asarray(g.edge_x),
+                                  jnp.asarray(g.senders),
+                                  jnp.asarray(g.receivers),
+                                  jnp.asarray(g.target, jnp.float32),
+                                  int(g.n_nodes))
+            ep_loss += float(lval)
+            b1, b2 = 0.9, 0.999
+            m = jax.tree.map(lambda a, g_: b1 * a + (1 - b1) * g_, m, grads)
+            v = jax.tree.map(lambda a, g_: b2 * a + (1 - b2) * g_ * g_, v, grads)
+            bc1 = 1 - b1 ** step
+            bc2 = 1 - b2 ** step
+            params = jax.tree.map(
+                lambda p_, m_, v_: p_ - lr * (m_ / bc1)
+                / (jnp.sqrt(v_ / bc2) + 1e-8),
+                params, m, v)
+        losses.append(ep_loss / max(len(dataset), 1))
+    return params, losses
+
+
+_gnn_forward_jit = jax.jit(gnn_forward, static_argnums=(5,))
+
+
+def predict_transfer_makespan(params: Dict, graph: ChunkGraph,
+                              design: WSCDesign, t_idx: int) -> float:
+    """Eq. 6 reconstruction: per-packet t(k) = k + sum of predicted waits on
+    its route; transfer makespan = max over packets of inject + latency."""
+    g = featurize_transfer(graph, design, t_idx)
+    if len(g.links) == 0:
+        return 0.0
+    wait = np.asarray(_gnn_forward_jit(
+        jax.tree.map(jnp.asarray, params), jnp.asarray(g.node_x),
+        jnp.asarray(g.edge_x), jnp.asarray(g.senders),
+        jnp.asarray(g.receivers), int(g.n_nodes)))
+    wait_by_link = {l: float(w) for l, w in zip(g.links, wait)}
+    W = graph.array[1]
+    pkts = packets_for_transfer(graph, design, t_idx)
+    worst = 0.0
+    for p in pkts:
+        route = _xy_route(p.src, p.dst, W)
+        t = p.flits + len(route) + sum(wait_by_link.get(h, 0.0) for h in route)
+        worst = max(worst, p.inject + t)
+    return worst
+
+
+def chunk_latency_cycles_gnn(params: Dict, graph: ChunkGraph,
+                             design: WSCDesign) -> float:
+    total = 0.0
+    for i, node in enumerate(graph.ops):
+        total += node.tile.cycles
+        if i < len(graph.transfers) and graph.transfers[i].pairs:
+            total += predict_transfer_makespan(params, graph, design, i)
+    return total

@@ -1,0 +1,98 @@
+"""Cycle-approximate NoC simulator — the ground-truth oracle standing in for
+the paper's extended BookSim2 (§VIII-A; see DESIGN.md §3 for the fidelity
+argument). Wormhole-approximate queueing at packet granularity:
+
+  - each directed mesh link transmits 1 flit/cycle (flit = noc_bw bits);
+  - a packet's head advances hop-by-hop, queueing on per-link next-free
+    times (contention), paying 1 router-cycle per hop;
+  - serialization (flit count) is paid on each link's occupancy and once on
+    delivery (wormhole pipelining);
+  - per-link waiting times are accumulated — they are the GNN's regression
+    targets, and packet latencies validate Eq. 6 reconstruction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.compiler import ChunkGraph, _xy_route
+from repro.core.design_space import WSCDesign
+
+
+@dataclasses.dataclass
+class Packet:
+    src: int
+    dst: int
+    flits: int
+    inject: float
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    avg_latency: float
+    link_wait: Dict[Tuple[int, int], float]     # avg waiting per link
+    link_util: Dict[Tuple[int, int], float]
+
+
+def packets_for_transfer(graph: ChunkGraph, design: WSCDesign, t_idx: int
+                         ) -> List[Packet]:
+    t = graph.transfers[t_idx]
+    interval = graph.ops[t.src_op].tile.out_interval_cycles
+    flit_bits = design.noc_bw
+    pkts = []
+    per_src_seq: Dict[int, int] = {}
+    for s, d, b in t.pairs:
+        seq = per_src_seq.get(s, 0)
+        per_src_seq[s] = seq + 1
+        flits = max(int(np.ceil(b * 8.0 / flit_bits)), 1)
+        pkts.append(Packet(s, d, flits, inject=seq * interval))
+    return pkts
+
+
+def simulate(packets: List[Packet], W: int) -> SimResult:
+    """Event-ordered single-pass queueing simulation."""
+    link_free: Dict[Tuple[int, int], float] = {}
+    wait_sum: Dict[Tuple[int, int], float] = {}
+    wait_cnt: Dict[Tuple[int, int], int] = {}
+    busy: Dict[Tuple[int, int], float] = {}
+
+    done_t = []
+    # process in inject order (heap keyed by current head time)
+    heap = [(p.inject, i) for i, p in enumerate(packets)]
+    heapq.heapify(heap)
+    while heap:
+        t0, i = heapq.heappop(heap)
+        p = packets[i]
+        t = t0
+        for hop in _xy_route(p.src, p.dst, W):
+            free = link_free.get(hop, 0.0)
+            start = max(t, free)
+            wait_sum[hop] = wait_sum.get(hop, 0.0) + (start - t)
+            wait_cnt[hop] = wait_cnt.get(hop, 0) + 1
+            link_free[hop] = start + p.flits          # serialization occupancy
+            busy[hop] = busy.get(hop, 0.0) + p.flits
+            t = start + 1.0                            # head advances (wormhole)
+        done_t.append(t + p.flits)                     # tail arrives
+
+    makespan = max(done_t) if done_t else 0.0
+    lat = [dt - p.inject for dt, p in zip(done_t, packets)]
+    link_wait = {k: wait_sum[k] / max(wait_cnt[k], 1) for k in wait_sum}
+    util = {k: busy[k] / max(makespan, 1.0) for k in busy}
+    return SimResult(makespan=makespan,
+                     avg_latency=float(np.mean(lat)) if lat else 0.0,
+                     link_wait=link_wait, link_util=util)
+
+
+def chunk_latency_cycles_sim(graph: ChunkGraph, design: WSCDesign) -> float:
+    """High-fidelity chunk latency: compute + simulated comm makespans."""
+    total = 0.0
+    for i, node in enumerate(graph.ops):
+        total += node.tile.cycles
+        if i < len(graph.transfers) and graph.transfers[i].pairs:
+            pkts = packets_for_transfer(graph, design, i)
+            total += simulate(pkts, graph.array[1]).makespan
+    return total

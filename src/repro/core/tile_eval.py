@@ -1,0 +1,85 @@
+"""Tile-level evaluation (paper §VI-B): fixed-dataflow loop-nest model for a
+GEMM tile on one core (Timeloop/MAESTRO-style, simplified to the three
+canonical dataflows).
+
+For a core with `mac` MACs arranged as a pr x pc array and an SRAM of
+`buffer_kb`, a (M, K, N) GEMM tile yields:
+    - compute cycles (with dataflow-dependent utilization),
+    - SRAM traffic (data reuse bounded by buffer capacity),
+    - the output-production interval used by the NoC estimators.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.workload import BYTES, GEMMOp
+
+
+@dataclasses.dataclass(frozen=True)
+class TileResult:
+    cycles: float
+    util: float
+    sram_read_bits: float
+    sram_write_bits: float
+    out_interval_cycles: float     # avg cycles between output flit batches
+
+
+def _pe_dims(mac: int):
+    pr = 2 ** (int(math.log2(mac)) // 2)
+    return pr, mac // pr
+
+
+def evaluate_tile(op: GEMMOp, mac: int, buffer_kb: float, buffer_bw: int,
+                  dataflow: str) -> TileResult:
+    M, K, N = max(op.M, 1), max(op.K, 1), max(op.N, 1)
+    pr, pc = _pe_dims(mac)
+
+    # spatial mapping per dataflow: which two dims are laid across the array
+    if dataflow == "WS":        # weights (K x N) stationary
+        u1, u2, stream = K, N, M
+    elif dataflow == "OS":      # outputs (M x N) stationary
+        u1, u2, stream = M, N, K
+    else:                       # IS: inputs (M x K) stationary
+        u1, u2, stream = M, K, N
+
+    util = (min(u1, pr) / pr) * (min(u2, pc) / pc)
+    lanes = min(u1, pr) * min(u2, pc)
+    compute_cycles = math.ceil(u1 / pr) * math.ceil(u2 / pc) * stream
+
+    # SRAM traffic: stationary operand loaded ceil(stream-tiles) times less;
+    # streaming operand re-read once per stationary tile swap
+    t1, t2 = math.ceil(u1 / pr), math.ceil(u2 / pc)
+    if dataflow == "WS":
+        reads = (K * N            # weights once
+                 + M * K * t2     # acts re-read per N-tile
+                 + 0)
+        writes = M * N * t1       # partial sums per K-tile
+    elif dataflow == "OS":
+        reads = (M * K * t2 + K * N * t1)
+        writes = M * N
+    else:  # IS
+        reads = (M * K + K * N * t1)
+        writes = M * N * t2
+
+    # buffer capacity check: if the stationary tile exceeds SRAM, extra
+    # re-fetches (capacity factor)
+    buf_bits = buffer_kb * 1024 * 8
+    stat_bits = {"WS": min(K, pr) * min(N, pc),
+                 "OS": min(M, pr) * min(N, pc),
+                 "IS": min(M, pr) * min(K, pc)}[dataflow] * BYTES * 8
+    cap_factor = max(1.0, stat_bits / max(buf_bits, 1))
+
+    read_bits = reads * BYTES * 8 * cap_factor
+    write_bits = writes * BYTES * 8
+    mem_cycles = (read_bits + write_bits) / max(buffer_bw, 1)
+
+    cycles = max(compute_cycles, mem_cycles)
+    n_out_batches = max(t1 * t2, 1)
+    return TileResult(
+        cycles=float(cycles),
+        util=float(util),
+        sram_read_bits=float(read_bits),
+        sram_write_bits=float(write_bits),
+        out_interval_cycles=float(cycles / n_out_batches),
+    )

@@ -1,0 +1,75 @@
+"""Design Point Validator (paper §V-E): area, power, yield, SRAM-compiler
+feasibility, and TSV stress constraints. Resolves the redundancy (spares per
+row) needed for the 0.9 yield target as a side effect.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core import components as C
+from repro.core.design_space import WSCDesign
+from repro.core.yield_model import YIELD_TARGET, min_spares_for_target
+
+
+@dataclasses.dataclass
+class ValidationResult:
+    ok: bool
+    reason: str = ""
+    design: Optional[WSCDesign] = None       # with spares_per_row resolved
+    wafer_yield: float = 0.0
+
+
+def sram_feasible(buffer_kb: int, buffer_bw: int) -> bool:
+    """SRAM-compiler feasibility: tiny macros can't supply very wide ports,
+    huge macros can't be both dense and wide (paper: 'some combinations of
+    SRAM configurations are infeasible')."""
+    if buffer_bw > 64 * buffer_kb:          # > 64 bits/cycle per KB: too wide
+        return False
+    if buffer_kb >= 1024 and buffer_bw > 2048:
+        return False
+    return True
+
+
+def validate(d: WSCDesign, peak_power_w: float = C.WAFER_POWER_W
+             ) -> ValidationResult:
+    # --- SRAM constraint ----------------------------------------------------
+    if not sram_feasible(d.buffer_kb, d.buffer_bw):
+        return ValidationResult(False, "sram_infeasible")
+
+    # --- stress constraint (TSV area ratio) ----------------------------------
+    if d.use_stacked_dram:
+        ratio = d.tsv_area_mm2() / max(d.reticle_area_mm2(), 1e-9)
+        if ratio > C.TSV_AREA_RATIO_MAX:
+            return ValidationResult(False, "tsv_stress")
+
+    # --- reticle area constraint ---------------------------------------------
+    r_area = d.reticle_area_mm2()
+    if r_area > C.RETICLE_AREA_MM2:
+        return ValidationResult(False, "reticle_area")
+
+    # --- wafer area constraint ----------------------------------------------
+    if d.wafer_area_mm2() > C.WAFER_AREA_MM2:
+        return ValidationResult(False, "wafer_area")
+
+    # --- yield constraint (resolve redundancy) -------------------------------
+    ch, cw = d.core_dims_mm()
+    spares, wy = min_spares_for_target(
+        ch, cw, d.core_array,
+        (d.core_array[0] * ch, d.core_array[1] * cw),
+        d.tsv_area_mm2(), d.n_reticles(), d.integration,
+        target=YIELD_TARGET)
+    if spares < 0:
+        return ValidationResult(False, "yield")
+    resolved = dataclasses.replace(d, spares_per_row=spares)
+    # re-check reticle area with the spare columns added
+    if resolved.reticle_area_mm2() > C.RETICLE_AREA_MM2:
+        return ValidationResult(False, "reticle_area_with_spares")
+    if resolved.wafer_area_mm2() > C.WAFER_AREA_MM2:
+        return ValidationResult(False, "wafer_area_with_spares")
+
+    # --- static power sanity (dynamic power checked post-evaluation) --------
+    if resolved.static_power_w() > peak_power_w:
+        return ValidationResult(False, "static_power")
+
+    return ValidationResult(True, "", resolved, wy)

@@ -1,0 +1,156 @@
+"""LLM workload descriptors for the DSE (paper §VIII-A, Table II) + bridge
+from the runtime's ModelConfig so every assigned architecture is a DSE
+benchmark too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+BYTES = 2          # bf16 activations/weights on-wafer
+
+
+@dataclasses.dataclass(frozen=True)
+class GEMMOp:
+    name: str
+    M: int            # tokens (rows)
+    K: int
+    N: int
+    weight: bool = True          # K x N is a resident weight (vs act x act)
+
+    def flops(self) -> float:
+        return 2.0 * self.M * self.K * self.N
+
+    def in_bytes(self) -> float:
+        return (self.M * self.K + self.K * self.N) * BYTES
+
+    def out_bytes(self) -> float:
+        return self.M * self.N * BYTES
+
+
+@dataclasses.dataclass(frozen=True)
+class LLMWorkload:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    seq: int
+    batch: int
+    phase: str                     # train | prefill | decode
+    moe_experts: int = 0
+    moe_topk: int = 0
+    gpu_budget: int = 1            # baseline GPU count (area matching)
+
+    # ------------------------------------------------------------------
+
+    def params_bytes(self) -> float:
+        D, F, L = self.d_model, self.d_ff, self.n_layers
+        per = 4 * D * D + 3 * D * F * max(self.moe_experts, 1)
+        return (L * per + 2 * self.vocab * D) * BYTES
+
+    def active_params(self) -> float:
+        D, F, L = self.d_model, self.d_ff, self.n_layers
+        e = self.moe_topk if self.moe_experts else 1
+        return L * (4 * D * D + 3 * D * F * e) + self.vocab * D
+
+    def tokens_per_step(self) -> int:
+        if self.phase == "decode":
+            return self.batch
+        return self.batch * self.seq
+
+    def layer_ops(self, tp: int = 1, mb_tokens: Optional[int] = None
+                  ) -> List[GEMMOp]:
+        """One layer's GEMMs under tensor parallelism `tp` (Megatron split:
+        heads/ffn sharded; two collectives per layer accounted by chunk_eval).
+        M = tokens per microbatch."""
+        D, F = self.d_model, self.d_ff
+        hd = D // max(self.n_heads, 1)
+        M = mb_tokens if mb_tokens is not None else self.tokens_per_step()
+        kv_len = self.seq if self.phase == "decode" else M // self.batch
+        e = self.moe_topk if self.moe_experts else 1
+        ops = [
+            GEMMOp("qkv", M, D, (self.n_heads + 2 * self.n_kv) * hd // tp),
+            GEMMOp("scores", M * max(self.n_heads // tp, 1) // max(self.n_heads, 1),
+                   hd, kv_len, weight=False),
+            GEMMOp("attnv", M * max(self.n_heads // tp, 1) // max(self.n_heads, 1),
+                   kv_len, hd, weight=False),
+            GEMMOp("attn_out", M, self.n_heads * hd // tp, D),
+            GEMMOp("mlp_in", M * e, D, 2 * F // tp),
+            GEMMOp("mlp_out", M * e, F // tp, D),
+        ]
+        return ops
+
+    def flops_per_step(self) -> float:
+        mult = 3.0 if self.phase == "train" else 1.0   # fwd+bwd ~ 3x fwd
+        return 2.0 * self.active_params() * self.tokens_per_step() * mult
+
+    def kv_bytes_per_layer(self) -> float:
+        hd = self.d_model // max(self.n_heads, 1)
+        return 2 * self.batch * self.seq * self.n_kv * hd * BYTES
+
+    def act_bytes_per_layer(self, mb_tokens: int) -> float:
+        return mb_tokens * self.d_model * BYTES
+
+
+# ---------------------------------------------------------------------------
+# paper Table II benchmarks (Megatron-LM / GPT-3 / ZeRO-Infinity scalings)
+# ---------------------------------------------------------------------------
+
+def _gpt(name, params_b, layers, hidden, heads, gpus, batch) -> LLMWorkload:
+    return LLMWorkload(
+        name=name, n_layers=layers, d_model=hidden, n_heads=heads,
+        n_kv=heads, d_ff=4 * hidden, vocab=51200, seq=2048, batch=batch,
+        phase="train", gpu_budget=gpus)
+
+
+GPT_BENCHMARKS: Tuple[LLMWorkload, ...] = (
+    _gpt("GPT-1.7B", 1.7, 24, 2304, 24, 32, 512),
+    _gpt("GPT-3.6B", 3.6, 30, 3072, 32, 64, 512),
+    _gpt("GPT-7.5B", 7.5, 36, 4096, 32, 128, 512),
+    _gpt("GPT-18B", 18.4, 40, 6144, 48, 256, 1024),
+    _gpt("GPT-39B", 39.1, 48, 8192, 64, 512, 1536),
+    _gpt("GPT-76B", 76.1, 60, 10240, 80, 1024, 1792),
+    _gpt("GPT-145B", 145.6, 80, 12288, 96, 1536, 2304),
+    _gpt("GPT-175B", 175.0, 96, 12288, 96, 1000, 2048),
+    _gpt("GPT-310B", 310.1, 96, 16384, 128, 1920, 2160),
+    _gpt("GPT-530B", 529.6, 105, 20480, 128, 2520, 2520),
+    _gpt("GPT-1T", 1008.0, 128, 25600, 160, 3072, 3072),
+    _gpt("GPT-2.2T", 2244.5, 192, 32768, 256, 6000, 3072),
+    _gpt("GPT-4T", 4066.6, 192, 43008, 432, 12000, 5500),
+    _gpt("GPT-9.6T", 9588.2, 195, 65536, 512, 30000, 10000),
+    _gpt("GPT-18T", 18436.5, 240, 81920, 620, 60000, 15000),
+    _gpt("GPT-32T", 32405.7, 270, 102400, 850, 100000, 20000),
+)
+
+
+def inference_workload(base: LLMWorkload, phase: str, batch: int = 32,
+                       seq: int = 2048) -> LLMWorkload:
+    return dataclasses.replace(base, phase=phase, batch=batch, seq=seq)
+
+
+def from_model_config(cfg: ModelConfig, shape: ShapeConfig) -> LLMWorkload:
+    """Bridge: assigned runtime architectures as DSE benchmarks."""
+    heads = max(cfg.n_heads, 1)
+    d_ff = cfg.d_ff
+    if cfg.family in ("ssm", "hybrid") and d_ff == 0:
+        d_ff = 2 * cfg.d_model      # SSD GEMM-equivalent inner width
+    return LLMWorkload(
+        name=cfg.name,
+        n_layers=cfg.num_layers,
+        d_model=cfg.d_model,
+        n_heads=heads,
+        n_kv=max(cfg.n_kv, 1),
+        d_ff=d_ff,
+        vocab=cfg.vocab,
+        seq=shape.seq_len,
+        batch=shape.global_batch,
+        phase=shape.kind,
+        moe_experts=cfg.moe.num_experts if cfg.moe else 0,
+        moe_topk=cfg.moe.top_k if cfg.moe else 0,
+        gpu_budget=max(1, cfg.param_count() * 8 // (80 * 2 ** 30)),
+    )

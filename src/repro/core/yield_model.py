@@ -1,0 +1,136 @@
+"""Defective-core + redundancy yield models (paper §V-C, §V-D).
+
+    Yield_Murphy = [(1 - e^{-A D0}) / (A D0)]^2                        (Eq. 1)
+    Yield_str    = (loss/d_max) d + 1 - loss   for d < d_max           (Eq. 2)
+    Yield_core   = Murphy x stress x TSV                               (Eq. 3)
+    Y_PS         = sum_{i=p}^{p+n} C(p+n, i) y^i (1-y)^{p+n-i}         (Eq. 4)
+
+Per-position yields over the reticle core grid (screw holes at reticle
+corners, TSV field at reticle centre) + Monte-Carlo row-redundancy estimate
+(Cerebras-style extra row connections, paper §VIII-A).
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+from typing import Tuple
+
+import numpy as np
+
+D0_PER_CM2 = 0.1                 # paper §VIII-A (IRDS)
+STRESS_LOSS = 0.1
+STRESS_DMAX_MM = 1.0
+TSV_LOSS = 0.1
+TSV_DMAX_MM = 1.0
+YIELD_TARGET = 0.9
+
+
+def murphy_yield(area_mm2: float, d0: float = D0_PER_CM2) -> float:
+    a_cm2 = area_mm2 / 100.0
+    ad = a_cm2 * d0
+    if ad < 1e-12:
+        return 1.0
+    return ((1.0 - math.exp(-ad)) / ad) ** 2
+
+
+def stress_yield(dist_mm: float, loss: float = STRESS_LOSS,
+                 dmax: float = STRESS_DMAX_MM) -> float:
+    if dist_mm >= dmax:
+        return 1.0
+    return (loss / dmax) * dist_mm + 1.0 - loss
+
+
+def core_yield_grid(core_h_mm: float, core_w_mm: float,
+                    array: Tuple[int, int],
+                    reticle_mm: Tuple[float, float],
+                    tsv_region_mm2: float = 0.0) -> np.ndarray:
+    """Per-position core yield over an (H, W) array on one reticle.
+    Screw holes sit at the four reticle corners (intersections of reticles on
+    the wafer); the TSV field sits at the reticle centre."""
+    H, W = array
+    area = core_h_mm * core_w_mm
+    base = murphy_yield(area)
+    ys = np.full((H, W), base)
+
+    # nearest-vertex distances of each core to the four corners
+    ci = (np.arange(H)[:, None] + 0.5) * core_h_mm
+    cj = (np.arange(W)[None, :] + 0.5) * core_w_mm
+    rh, rw = reticle_mm
+    for hy, hx in ((0, 0), (0, rw), (rh, 0), (rh, rw)):
+        d = np.sqrt((ci - hy) ** 2 + (cj - hx) ** 2)
+        d = np.maximum(d - 0.5 * math.hypot(core_h_mm, core_w_mm), 0.0)
+        ys = ys * np.where(d < STRESS_DMAX_MM,
+                           (STRESS_LOSS / STRESS_DMAX_MM) * d + 1 - STRESS_LOSS,
+                           1.0)
+
+    if tsv_region_mm2 > 0.0:
+        r_tsv = math.sqrt(tsv_region_mm2 / math.pi)
+        d = np.sqrt((ci - rh / 2) ** 2 + (cj - rw / 2) ** 2)
+        d = np.maximum(d - r_tsv, 0.0)
+        ys = ys * np.where(d < TSV_DMAX_MM,
+                           (TSV_LOSS / TSV_DMAX_MM) * d + 1 - TSV_LOSS,
+                           1.0)
+    return np.clip(ys, 0.0, 1.0)
+
+
+def binomial_redundancy_yield(p_cores: int, n_spare: int, y_core: float
+                              ) -> float:
+    """Eq. 4: reticle works if >= p of (p+n) cores are good (uniform yield)."""
+    total = p_cores + n_spare
+    acc = 0.0
+    for i in range(p_cores, total + 1):
+        acc += math.comb(total, i) * (y_core ** i) * ((1 - y_core) ** (total - i))
+    return acc
+
+
+def mc_row_redundancy_yield(ys: np.ndarray, spares_per_row: int,
+                            n_samples: int = 2000, seed: int = 0) -> float:
+    """Monte-Carlo with position-dependent yields and Cerebras-style row
+    repair: a reticle works iff every row has <= spares_per_row failures."""
+    rng = np.random.default_rng(seed)
+    H, W = ys.shape
+    fails = rng.random((n_samples, H, W)) > ys[None]
+    per_row = fails.sum(axis=2)
+    ok = (per_row <= spares_per_row).all(axis=1)
+    return float(ok.mean())
+
+
+@lru_cache(maxsize=4096)
+def reticle_yield(core_h_mm: float, core_w_mm: float, array: Tuple[int, int],
+                  reticle_mm: Tuple[float, float], tsv_region_mm2: float,
+                  spares_per_row: int) -> float:
+    ys = core_yield_grid(core_h_mm, core_w_mm, array, reticle_mm,
+                         tsv_region_mm2)
+    return mc_row_redundancy_yield(ys, spares_per_row)
+
+
+# per-boundary yield of on-wafer field stitching (offset-exposure seams are
+# fabricated blind — no KGD test before commit); InFO-SoW assembles tested
+# dies on an RDL, so its assembly yield is near-unity
+STITCH_BOUNDARY_YIELD = 0.9995
+
+
+def min_spares_for_target(core_h_mm: float, core_w_mm: float,
+                          array: Tuple[int, int],
+                          reticle_mm: Tuple[float, float],
+                          tsv_region_mm2: float,
+                          n_reticles: int,
+                          integration: str,
+                          target: float = YIELD_TARGET,
+                          max_spares: int = 4) -> Tuple[int, float]:
+    """Smallest spares-per-row meeting the wafer yield target.
+
+    InFO-SoW uses known-good-die: wafer yield == reticle yield (paper §VIII-A).
+    Die stitching cannot discard bad reticles: wafer yield = reticle^n x
+    the stitched-seam yield."""
+    for spares in range(0, max_spares + 1):
+        ry = reticle_yield(core_h_mm, core_w_mm, array, reticle_mm,
+                           tsv_region_mm2, spares)
+        if integration == "infosow":
+            wy = ry
+        else:
+            n_seams = 2 * n_reticles        # ~2 shared boundaries per reticle
+            wy = (ry ** n_reticles) * (STITCH_BOUNDARY_YIELD ** n_seams)
+        if wy >= target:
+            return spares, wy
+    return -1, 0.0

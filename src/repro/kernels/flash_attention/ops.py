@@ -1,0 +1,38 @@
+"""jit'd public wrapper for fused attention.
+
+`mha()` routes between:
+  - the Pallas flash kernel (aligned self-attention: train / prefill), and
+  - the jnp masked oracle (decode-with-cache / arbitrary position vectors),
+chosen by `use_pallas` (default off on CPU; launch/train flips it on for TPU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def mha(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    if use_pallas:
+        # the kernel assumes aligned iota positions (self-attention)
+        return flash_attention(
+            q, k, v, causal=causal, window=window,
+            softmax_scale=softmax_scale, interpret=interpret)
+    return attention_ref(
+        q, k, v, q_pos, kv_pos,
+        causal=causal, window=window, softmax_scale=softmax_scale)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracle for fused attention (GQA + causal + sliding window).
+
+Layout: BSHD — q (B, Sq, Hq, hd), k/v (B, Skv, Hkv, hd).
+Masking is position-based so the same oracle covers training (positions =
+iota), prefill, and decode-with-cache (arbitrary q/kv position vectors,
+including ring-buffer caches where kv slots hold non-monotone positions).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def make_mask(
+    q_pos: jnp.ndarray,      # (B, Sq) int32
+    kv_pos: jnp.ndarray,     # (B, Skv) int32; negative = invalid slot
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: int = 0,     # prefix-LM: bidirectional among first P positions
+) -> jnp.ndarray:
+    """Boolean (B, Sq, Skv) mask: True = may attend."""
+    q = q_pos[:, :, None]
+    kv = kv_pos[:, None, :]
+    mask = kv >= 0
+    if causal:
+        cm = kv <= q
+        if prefix_len > 0:
+            cm = cm | ((kv < prefix_len) & (q < prefix_len))
+        mask = mask & cm
+    if window is not None:
+        mask = mask & ((kv > q - window) | (kv < prefix_len))
+    return mask
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+    softmax_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Reference attention. Returns (B, Sq, Hq, hd) in q.dtype."""
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    rep = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if rep > 1:
+        kf = jnp.repeat(kf, rep, axis=2)
+        vf = jnp.repeat(vf, rep, axis=2)
+
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    mask = make_mask(q_pos, kv_pos, causal=causal, window=window,
+                     prefix_len=prefix_len)
+    scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+    probs = jnp.nan_to_num(
+        jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True)))
+    probs = probs / jnp.maximum(jnp.sum(probs, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)

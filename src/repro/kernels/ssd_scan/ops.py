@@ -1,0 +1,29 @@
+"""jit'd public wrapper for the SSD scan."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_chunked_ref, ssd_decode_step_ref
+
+
+def ssd(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    Bm: jnp.ndarray,
+    Cm: jnp.ndarray,
+    D: Optional[jnp.ndarray] = None,
+    *,
+    chunk: int = 128,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if use_pallas:
+        return ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=interpret)
+    return ssd_chunked_ref(x, dt, A, Bm, Cm, D, chunk=chunk)
+
+
+ssd_decode_step = ssd_decode_step_ref

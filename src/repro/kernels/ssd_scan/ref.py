@@ -1,0 +1,152 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space duality) scan.
+
+Sequential recurrence (ground truth):
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * (B_t outer x_t)     h: (H, P, N)
+    y_t = C_t . h_t + D_h * x_t
+
+Shapes (single group G=1, B/C shared across heads):
+    x  (B, S, H, P)    dt (B, S, H)    A (H,)  negative
+    Bm (B, S, N)       Cm (B, S, N)    D (H,)
+Returns y (B, S, H, P) and final state (B, H, P, N).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    Bm: jnp.ndarray,
+    Cm: jnp.ndarray,
+    D: Optional[jnp.ndarray] = None,
+    init_state: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    h0 = (jnp.zeros((Bsz, H, P, N), jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp          # (B,H,P) (B,H) (B,N) (B,N)
+        decay = jnp.exp(dtt * Af[None, :])          # (B,H)
+        dbx = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, bt)
+        h = h * decay[:, :, None, None] + dbx
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                       # (B,S,H,P)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype), hT
+
+
+def ssd_chunked_ref(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    Bm: jnp.ndarray,
+    Cm: jnp.ndarray,
+    D: Optional[jnp.ndarray] = None,
+    init_state: Optional[jnp.ndarray] = None,
+    chunk: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunk-parallel SSD (the algorithm the Pallas kernel implements):
+    intra-chunk quadratic 'attention' form + inter-chunk state recurrence.
+    Mathematically identical to ssd_ref; used as a second oracle and as the
+    jnp fallback inside the model when the Pallas path is off."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        # dt=0 padding tokens are no-ops: exp(0*A)=1 decay, zero contribution
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        y, hT = ssd_chunked_ref(x, dt, A, Bm, Cm, None, init_state, chunk)
+        y = y[:, :S]
+        if D is not None:
+            y = (y.astype(jnp.float32)
+                 + D.astype(jnp.float32)[None, None, :, None]
+                 * x[:, :S].astype(jnp.float32)).astype(y.dtype)
+        return y, hT
+    nc, Q = S // chunk, chunk
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, Q, H)
+    Bf = Bm.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+    Cf = Cm.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+    Af = A.astype(jnp.float32)
+
+    dA = dtf * Af[None, None, None, :]               # (B,nc,Q,H) log-decay
+    cum = jnp.cumsum(dA, axis=2)                     # L_t inclusive
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H) L_t-L_s
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay_m = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk: y[t] = sum_{s<=t} (C_t.B_s) exp(L_t-L_s) dt_s x_s
+    cb = jnp.einsum("bctn,bcsn->bcts", Cf, Bf)       # (B,nc,Q,Q)
+    m = cb[:, :, :, :, None] * decay_m * dtf[:, :, None, :, :]
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", m, xf)
+
+    # per-chunk final state contribution: sum_s exp(L_Q - L_s) dt_s B_s x_s
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bcqh,bcqh,bcqn,bcqhp->bchpn",
+                             tail, dtf, Bf, xf)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])          # (B,nc,H) exp(L_Q)
+
+    h0 = (jnp.zeros((Bsz, H, P, N), jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+
+    def inter(h, inp):
+        cs, cd = inp                                 # (B,H,P,N),(B,H)
+        h_in = h                                     # state BEFORE this chunk
+        h = h * cd[:, :, None, None] + cs
+        return h, h_in
+
+    hT, h_prevs = jax.lax.scan(
+        inter, h0, (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)            # (B,nc,H,P,N)
+
+    # inter-chunk: y[t] += C_t . (exp(L_t) * h_prev)
+    inter_y = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cf, h_prevs, jnp.exp(cum))
+    y = (y_intra + inter_y).reshape(Bsz, S, H, P)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), hT
+
+
+def ssd_decode_step_ref(
+    state: jnp.ndarray,   # (B,H,P,N) fp32
+    x: jnp.ndarray,       # (B,H,P)
+    dt: jnp.ndarray,      # (B,H)
+    A: jnp.ndarray,       # (H,)
+    Bm: jnp.ndarray,      # (B,N)
+    Cm: jnp.ndarray,      # (B,N)
+    D: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrent update (decode path)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A.astype(jnp.float32)[None, :])
+    dbx = jnp.einsum("bh,bhp,bn->bhpn", dtf, xf, Bm.astype(jnp.float32))
+    state = state * decay[:, :, None, None] + dbx
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, :, None] * xf
+    return y.astype(x.dtype), state

@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+# ShapeDtypeStruct stand-ins (no allocation), record memory/cost analysis and
+# roofline terms. The two lines above MUST stay first — jax locks the device
+# count on first init.
+#
+# Usage:
+#     PYTHONPATH=src python -m repro.launch.dryrun                 # full sweep
+#     ... --arch smollm-135m --shape train_4k --mesh single
+#     ... --variant <name>      # hillclimb variants (see VARIANTS)
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPE_IDS, get_config, get_shape
+from repro.dist import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import model_flops, roofline_from_artifacts
+from repro.models import model as M
+from repro.models.runtime import Runtime
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_step import default_microbatches, make_train_step
+
+# archs whose attention is fully quadratic: long_500k is intractable by
+# construction (see DESIGN.md §5) and recorded as SKIP(attn)
+SKIP_LONG = {"whisper-small", "qwen1.5-32b", "qwen2-0.5b", "smollm-135m",
+             "grok-1-314b", "paligemma-3b"}
+
+# hillclimb variants (EXPERIMENTS.md §Perf documents each).
+# "baseline" == paper-faithful lowering: scatter cache updates, naive flat
+# TP on SSM projections, fp32 grad accumulation. "opt" variants layer the
+# beyond-paper changes on top; each is measured separately in §Perf.
+VARIANTS: Dict[str, Dict] = {
+    "baseline": {"opt_cache_dus": False, "opt_ssm_head_tp": False},
+    # OPT-A (decode): dynamic-update-slice cache writes keep seq-sharded
+    # KV caches sharded (fixes the 291 GB/chip all-gather per decode step)
+    "opt_dus": {},
+    # OPT-A + ring-buffer KV caches for sliding-window layers
+    "opt_ring": {"ring_cache": True},
+    # OPT-B (SSM): head-dim tensor parallelism for SSD (fixes the packed
+    # in_proj reshard storm: 208 collective-permutes / 1.2 TB per step)
+    "opt_ssm": {},
+    # OPT-B + smaller SSD chunk (decay-matrix HBM footprint ~ S x Q x H)
+    "opt_ssm_q64": {"ssd_chunk": 64},
+    "opt_ssm_q32": {"ssd_chunk": 32},
+    # OPT-C (MoE train): fewer grad-accumulation microbatches cut the
+    # per-microbatch FSDP re-gather + grad-reduction traffic
+    "opt_mb8": {"mb_scale": 0.5},
+    "opt_mb4": {"mb_scale": 0.25},
+    # OPT-C + bf16 gradient accumulation (halves reduction bytes)
+    "opt_mb4_bf16g": {"mb_scale": 0.25, "grad_bf16": True},
+    # OPT-C + MoE dispatch buffer sharded over model too (the dispatch
+    # scatter's all-reduce is the dominant grok collective)
+    "opt_mb4_bufmod": {"mb_scale": 0.25, "moe_buf_model": True},
+    # OPT-D (prefill): bf16 score einsums with fp32 MXU accumulation — no
+    # materialized fp32 Q/K/V copies in the chunked prefill path
+    "opt_bf16s": {"bf16_scores": True},
+    # memory-for-compute: no per-layer remat
+    "no_remat": {"remat": "none"},
+}
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "pod2x16x16" if multi_pod else "pod16x16"
+
+
+def build_runtime(cfg, mesh, variant: Dict) -> Runtime:
+    dp = sh.dp_axes(mesh)
+    moe_spec = P(None, dp, None) if cfg.family == "moe" else None
+    if cfg.family == "moe" and variant.get("moe_buf_model"):
+        moe_spec = P(None, dp, "model")
+    mesh_axes = {a: int(mesh.shape[a]) for a in mesh.axis_names}
+    return Runtime(
+        compute_dtype=jnp.bfloat16,
+        remat=variant.get("remat", "block"),
+        ring_cache=variant.get("ring_cache", False),
+        ssd_chunk=variant.get("ssd_chunk", 128),
+        moe_buf_spec=moe_spec,
+        mesh_axes=mesh_axes,
+        opt_cache_dus=variant.get("opt_cache_dus", True),
+        opt_ssm_head_tp=variant.get("opt_ssm_head_tp", True),
+        opt_bf16_scores=variant.get("bf16_scores", False),
+        grad_acc_dtype=(jnp.bfloat16 if variant.get("grad_bf16")
+                        else jnp.float32),
+    )
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               variant_name: str = "baseline") -> Dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    variant = VARIANTS[variant_name]
+    result: Dict = {
+        "arch": arch, "shape": shape_name, "mesh": _mesh_tag(multi_pod),
+        "variant": variant_name, "status": "ok",
+    }
+
+    if shape_name == "long_500k" and arch in SKIP_LONG:
+        result["status"] = "SKIP(attn)"
+        result["reason"] = ("full quadratic attention; long-context decode "
+                            "intractable by construction (DESIGN.md §5)")
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rt = build_runtime(cfg, mesh, variant)
+
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(lambda k: M.init_params(k, cfg), key)
+    p_spec = sh.param_specs(mesh, params_sds,
+                            legacy_ssm=not rt.opt_ssm_head_tp)
+    p_shard = sh.to_shardings(mesh, p_spec)
+    batch_sds = M.input_specs(cfg, shape)
+    b_spec = sh.batch_specs(mesh, batch_sds)
+    b_shard = sh.to_shardings(mesh, b_spec)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        mb = default_microbatches(arch, shape.seq_len, shape.global_batch)
+        mb = max(1, int(mb * variant.get("mb_scale", 1.0)))
+        result["microbatches"] = mb
+        opt = AdamWConfig()
+        step = make_train_step(cfg, rt, opt, microbatches=mb)
+        opt_sds = jax.eval_shape(init_opt_state, params_sds)
+        o_spec = sh.opt_state_specs(mesh, opt_sds, p_spec)
+        o_shard = sh.to_shardings(mesh, o_spec)
+        with mesh:
+            jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, rt, max_len=shape.seq_len)
+        with mesh:
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_sds, batch_sds)
+    else:  # decode
+        step = make_decode_step(cfg, rt)
+        cache_sds = jax.eval_shape(
+            lambda: M.init_cache(cfg, rt, shape.global_batch, shape.seq_len))
+        c_spec = sh.cache_specs(mesh, cache_sds)
+        c_shard = sh.to_shardings(mesh, c_spec)
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        with mesh:
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, b_shard["tokens"],
+                              sh.to_shardings(mesh, P()), c_shard),
+                donate_argnums=(3,))
+            lowered = jitted.lower(params_sds, batch_sds["tokens"], pos_sds,
+                                   cache_sds)
+    result["lower_s"] = round(time.time() - t0, 2)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t0, 2)
+
+    # --- memory ------------------------------------------------------------
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            result["memory"] = {
+                k: int(getattr(ma, k)) for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)}
+    except Exception as e:  # CPU backend may not support it
+        result["memory_error"] = str(e)
+
+    # --- analytic per-device state bytes (params/opt/cache after sharding) --
+    def sharded_bytes(sds_tree, spec_tree):
+        import math as _m
+        total = 0
+        for sds, spec in zip(jax.tree.leaves(sds_tree),
+                             jax.tree.leaves(spec_tree,
+                                             is_leaf=lambda x: isinstance(x, P))):
+            shards = 1
+            for entry in spec:
+                if entry is None:
+                    continue
+                axes = (entry,) if isinstance(entry, str) else entry
+                shards *= _m.prod(mesh.shape[a] for a in axes)
+            total += sds.size * sds.dtype.itemsize // shards
+        return total
+
+    state = sharded_bytes(params_sds, p_spec)
+    if shape.kind == "train":
+        state += 2 * sharded_bytes(params_sds, p_spec)  # adam m, v (fp32)
+    if shape.kind == "decode":
+        state += sharded_bytes(cache_sds, c_spec)
+    result["state_bytes_per_chip"] = int(state)
+
+    # --- cost + roofline -----------------------------------------------------
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    result["cost"] = {k: float(v) for k, v in cost.items()
+                      if isinstance(v, (int, float))
+                      and k in ("flops", "bytes accessed", "transcendentals",
+                                "optimal_seconds")}
+    hlo = compiled.as_text()
+    rl = roofline_from_artifacts(cost, hlo, n_chips,
+                                 model_flops(cfg, shape))
+    result["roofline"] = rl.to_dict()
+    return result
+
+
+def run(args) -> int:
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPE_IDS)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                tag = f"{arch}__{shape_name}__{_mesh_tag(multi_pod)}__{args.variant}"
+                out_path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(out_path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                t0 = time.time()
+                try:
+                    res = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                     variant_name=args.variant)
+                except Exception:
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": _mesh_tag(multi_pod),
+                           "variant": args.variant, "status": "FAIL",
+                           "error": traceback.format_exc()}
+                    failures += 1
+                res["wall_s"] = round(time.time() - t0, 2)
+                with open(out_path, "w") as f:
+                    json.dump(res, f, indent=1)
+                print(f"    -> {res['status']} ({res['wall_s']}s)", flush=True)
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    failures = run(args)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

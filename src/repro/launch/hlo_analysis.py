@@ -1,0 +1,257 @@
+"""Trip-count-aware HLO analysis.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE — our stacks are
+`lax.scan`s (layers, microbatches, q-chunks), so aggregate cost_analysis()
+under-counts flops/bytes/collectives by the trip counts. This module parses
+the post-optimization HLO text into computations, resolves while-loop trip
+counts (from `backend_config={"known_trip_count":{"n":...}}`, falling back to
+the condition computation's bound constant), walks the call graph multiplying
+by trips, and accumulates:
+
+  - dot flops (2 x prod(result dims) x K from dot shapes)
+  - HBM bytes (per top-level op: result + operand bytes via symbol table;
+    fusion bodies are excluded — only fusion boundaries touch HBM)
+  - collective moved-bytes (ring accounting, per replica-group size)
+
+Known limitations (documented in EXPERIMENTS.md): CPU-backend fusion
+boundaries differ from TPU so byte counts are an upper bound; elementwise
+flops are ignored (<2% of transformer flops).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# TYPE is either a tuple `(...)` (no ')' occurs inside: shapes use []{} and
+# /*index=N*/ comments) or a single array type
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT )?%?([\w\.\-]+) = "
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*)) ([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALL_TARGET_RE = re.compile(
+    r"(?:calls|body|to_apply|computation)=\{?%?([\w\.\-]+)")
+_COND_TARGET_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVE_BASES = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    return [(dt, [int(d) for d in dims.split(",")] if dims else [])
+            for dt, dims in _SHAPE_RE.findall(type_str)]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str                      # everything after the open paren
+
+    @property
+    def operands_str(self) -> str:
+        return self.rest.split(")")[0]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: List[Op] = dataclasses.field(default_factory=list)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, "Computation"], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        if not stripped:
+            continue
+        if not line.startswith((" ", "\t")) and stripped.endswith("{") \
+                and ("->" in stripped or stripped.startswith(("ENTRY", "%"))):
+            is_entry = stripped.startswith("ENTRY")
+            head = stripped[6:] if is_entry else stripped
+            name = head.lstrip("%").split(" ")[0].split("(")[0]
+            cur = Computation(name, is_entry)
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            cur.ops.append(Op(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps, entry
+
+
+def _trip_count(op: Op, comps: Dict[str, Computation]) -> int:
+    m = _TRIP_RE.search(op.rest)
+    if m:
+        return int(m.group(1))
+    cm = _COND_TARGET_RE.search(op.rest)
+    if cm and cm.group(1) in comps:
+        consts = []
+        for o in comps[cm.group(1)].ops:
+            mm = _CONST_RE.search(o.opcode + "(" + o.rest)
+            if o.opcode == "constant" and mm:
+                consts.append(int(mm.group(1)))
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPLICIT_RE.search(rest)
+    if m:
+        return max(len([e for e in m.group(1).split(",") if e.strip()]), 1)
+    return 1
+
+
+@dataclasses.dataclass
+class HloStats:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_moved: float = 0.0
+    collective_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+    while_trips: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _dot_flops(op: Op, symtab: Dict[str, str]) -> float:
+    res = _shape_dims(op.type_str)
+    if not res:
+        return 0.0
+    out_elems = 1
+    for d in res[0][1]:
+        out_elems *= d
+    operands = _OPERAND_RE.findall(op.operands_str)
+    k = 1
+    m = _DOT_DIMS_RE.search(op.rest)
+    if m and operands:
+        dims = _shape_dims(symtab.get(operands[0], ""))
+        if dims:
+            ldims = dims[0][1]
+            for ci in (int(c) for c in m.group(1).split(",") if c):
+                if ci < len(ldims):
+                    k *= ldims[ci]
+    return 2.0 * out_elems * k
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "while", "call", "conditional",
+               "partition-id", "replica-id", "iota"}
+
+
+def analyze(text: str) -> HloStats:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        entry = next(iter(comps))
+
+    symtabs = {cn: {op.name: op.type_str for op in c.ops}
+               for cn, c in comps.items()}
+
+    # computations reachable only as fusion bodies / reducers: exclude
+    sub_bodies = set()
+    for c in comps.values():
+        for op in c.ops:
+            if op.opcode in ("fusion", "reduce", "scatter", "sort",
+                             "reduce-window", "select-and-scatter",
+                             "all-reduce", "reduce-scatter"):
+                for t in _CALL_TARGET_RE.findall(op.rest):
+                    sub_bodies.add(t)
+
+    stats = HloStats()
+
+    def walk(comp_name: str, mult: float):
+        c = comps.get(comp_name)
+        if c is None:
+            return
+        symtab = symtabs[comp_name]
+        for op in c.ops:
+            oc = op.opcode
+            if oc == "while":
+                trips = _trip_count(op, comps)
+                bm = re.search(r"body=\{?%?([\w\.\-]+)", op.rest)
+                if bm:
+                    stats.while_trips[bm.group(1)] = trips
+                    walk(bm.group(1), mult * trips)
+                continue
+            if oc in ("call", "conditional"):
+                for t in _CALL_TARGET_RE.findall(op.rest):
+                    if t in comps and t not in sub_bodies:
+                        walk(t, mult)
+                if oc == "conditional":
+                    # branches: branch_computations={%a, %b}
+                    bm = re.search(r"branch_computations=\{([^}]*)\}", op.rest)
+                    if bm:
+                        for t in _OPERAND_RE.findall(bm.group(1)):
+                            walk(t, mult)
+                continue
+            if oc in ("dot", "dot-general"):
+                stats.dot_flops += mult * _dot_flops(op, symtab)
+            base = next((b for b in COLLECTIVE_BASES
+                         if oc == b or oc == b + "-start"), None)
+            if base is not None:
+                nbytes = _shape_bytes(op.type_str)
+                if oc.endswith("-start") and op.type_str.startswith("("):
+                    nbytes //= 2          # (operand, result) tuple
+                k = _group_size(op.rest)
+                ring = max(k - 1, 0) / max(k, 1)
+                if base == "all-reduce":
+                    moved = 2.0 * ring * nbytes
+                elif base == "collective-permute":
+                    moved = float(nbytes)
+                else:
+                    moved = ring * nbytes
+                stats.collective_moved += mult * moved
+                stats.collective_by_op[base] = (
+                    stats.collective_by_op.get(base, 0.0) + mult * moved)
+                stats.collective_count[base] = (
+                    stats.collective_count.get(base, 0) + 1)
+            if oc in _SKIP_BYTES or oc.endswith("-done"):
+                continue
+            nbytes = _shape_bytes(op.type_str)
+            for operand in _OPERAND_RE.findall(op.operands_str):
+                if operand in symtab:
+                    nbytes += _shape_bytes(symtab[operand])
+            stats.hbm_bytes += mult * nbytes
+
+    walk(entry, 1.0)
+    return stats

@@ -1,0 +1,173 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+    compute_s    = HLO_FLOPs_per_chip / PEAK_FLOPS
+    memory_s     = HLO_bytes_per_chip / HBM_BW
+    collective_s = moved_bytes_per_chip / ICI_BW   (per-op ring accounting)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(). Collective bytes
+are NOT in cost_analysis: we parse the post-optimization HLO text and sum,
+per collective op, the ring-algorithm bytes each chip moves:
+    all-reduce          2 (k-1)/k x bytes
+    all-gather            (k-1)/k x result_bytes
+    reduce-scatter        (k-1)/k x input_bytes
+    all-to-all            (k-1)/k x bytes
+    collective-permute    bytes
+with k = replica-group size parsed from either explicit or iota groups.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `%name = TYPE all-reduce(...)` — TYPE may be a tuple of array types
+_OP_RE = re.compile(
+    r"= *((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*)) +"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op: str
+    count: int = 0
+    bytes_total: int = 0          # raw tensor bytes across occurrences
+    moved_bytes: float = 0.0      # ring-accounted per-chip bytes
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, CollectiveStats]:
+    stats = {op: CollectiveStats(op) for op in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        if "-done(" in line:      # async pair: count only the -start
+            continue
+        nbytes = _type_bytes(type_str)
+        k = _group_size(line)
+        ring = max(k - 1, 0) / max(k, 1)
+        if op == "all-reduce":
+            moved = 2.0 * ring * nbytes
+        elif op == "collective-permute":
+            moved = float(nbytes)
+        else:
+            moved = ring * nbytes
+        s = stats[op]
+        s.count += 1
+        s.bytes_total += nbytes
+        s.moved_bytes += moved
+    return stats
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        entries = [e for e in m.group(1).split(",") if e.strip()]
+        return max(len(entries), 1)
+    return 1
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_total: float
+    useful_ratio: float           # model_flops / (HLO flops x chips)
+    collectives: Dict[str, Dict]
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_from_artifacts(
+    cost: Dict,
+    hlo_text: str,
+    n_chips: int,
+    model_flops_total: float,
+) -> Roofline:
+    """Trip-count-aware terms via hlo_analysis (lax.scan bodies multiplied by
+    their trip counts); raw cost_analysis kept by the caller for reference."""
+    from repro.launch.hlo_analysis import analyze
+
+    stats = analyze(hlo_text)
+    flops = stats.dot_flops
+    raw_bytes = stats.hbm_bytes
+    coll_bytes = stats.collective_moved
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = raw_bytes / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops_total / max(flops * n_chips, 1.0)
+    return Roofline(
+        flops_per_chip=flops,
+        hbm_bytes_per_chip=raw_bytes,
+        collective_bytes_per_chip=coll_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops_total=model_flops_total,
+        useful_ratio=useful,
+        collectives={
+            op: {"op": op,
+                 "count": stats.collective_count.get(op, 0),
+                 "moved_bytes": stats.collective_by_op.get(op, 0.0)}
+            for op in stats.collective_by_op},
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful model FLOPs for the cell: 6·N·D for training, 2·N·D for
+    inference forward (N = active params, D = tokens processed)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n * tokens

@@ -1,0 +1,138 @@
+"""Whisper-style encoder-decoder backbone (conv/mel frontend is a stub: the
+assignment's `input_specs()` feeds precomputed frame embeddings).
+
+Encoder: bidirectional self-attn stack over frames.
+Decoder: causal self-attn + cross-attn + MLP, scanned, cache-able.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (
+    cached_attention,
+    cross_attention,
+    encode_cross_kv,
+    init_attention,
+    init_cross_attention,
+    init_kv_cache,
+    self_attention,
+)
+from repro.models.layers import init_mlp, mlp, rmsnorm
+from repro.models.runtime import Runtime
+
+
+def init_encoder_layers(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    stack = (cfg.encoder_layers,)
+    return {
+        "ln1": jnp.zeros((cfg.encoder_layers, cfg.d_model)),
+        "attn": init_attention(ks[0], cfg, stack),
+        "ln2": jnp.zeros((cfg.encoder_layers, cfg.d_model)),
+        "mlp": init_mlp(ks[1], cfg, cfg.d_ff, stack),
+    }
+
+
+def init_decoder_layers_xattn(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    stack = (cfg.num_layers,)
+    return {
+        "ln1": jnp.zeros((cfg.num_layers, cfg.d_model)),
+        "attn": init_attention(ks[0], cfg, stack),
+        "lnx": jnp.zeros((cfg.num_layers, cfg.d_model)),
+        "xattn": init_cross_attention(ks[1], cfg, stack),
+        "ln2": jnp.zeros((cfg.num_layers, cfg.d_model)),
+        "mlp": init_mlp(ks[2], cfg, cfg.d_ff, stack),
+    }
+
+
+def encode(frames: jnp.ndarray, enc_layers: dict, cfg: ModelConfig,
+           rt: Runtime) -> jnp.ndarray:
+    """frames (B, Senc, D) precomputed embeddings -> encoder output."""
+    B, Senc, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(Senc)[None], (B, Senc)).astype(jnp.int32)
+    x = frames.astype(rt.compute_dtype)
+
+    def body(xc, p_l):
+        h = rmsnorm(xc, p_l["ln1"], cfg.norm_eps)
+        xc = xc + self_attention(h, p_l["attn"], cfg, rt, positions,
+                                 causal=False)
+        h = rmsnorm(xc, p_l["ln2"], cfg.norm_eps)
+        return xc + mlp(h, p_l["mlp"], cfg, rt), None
+
+    if rt.remat == "block":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = jax.lax.scan(body, x, enc_layers)
+    return x
+
+
+def decode_stack(x, dec_layers: dict, cfg: ModelConfig, rt: Runtime,
+                 positions, enc_out) -> jnp.ndarray:
+    """Training/teacher-forcing decoder. Cross K/V projected per layer."""
+
+    def body(xc, p_l):
+        h = rmsnorm(xc, p_l["ln1"], cfg.norm_eps)
+        xc = xc + self_attention(h, p_l["attn"], cfg, rt, positions)
+        h = rmsnorm(xc, p_l["lnx"], cfg.norm_eps)
+        ek, ev = encode_cross_kv(enc_out, p_l["xattn"], cfg, rt)
+        xc = xc + cross_attention(h, p_l["xattn"], cfg, rt, ek, ev)
+        h = rmsnorm(xc, p_l["ln2"], cfg.norm_eps)
+        return xc + mlp(h, p_l["mlp"], cfg, rt), None
+
+    if rt.remat == "block":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = jax.lax.scan(body, x, dec_layers)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# decode with cache
+# ---------------------------------------------------------------------------
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int, rt: Runtime
+                      ) -> dict:
+    hd = cfg.hd()
+    return {
+        "self": init_kv_cache(cfg, batch, max_len, cfg.num_layers, rt),
+        "cross_k": jnp.zeros(
+            (cfg.num_layers, batch, cfg.encoder_len, cfg.n_kv, hd),
+            rt.compute_dtype),
+        "cross_v": jnp.zeros(
+            (cfg.num_layers, batch, cfg.encoder_len, cfg.n_kv, hd),
+            rt.compute_dtype),
+    }
+
+
+def fill_cross_cache(enc_out, dec_layers: dict, cfg: ModelConfig, rt: Runtime,
+                     cache: dict) -> dict:
+    """Project encoder output into every decoder layer's cross K/V once."""
+
+    def body(_, p_l):
+        ek, ev = encode_cross_kv(enc_out, p_l["xattn"], cfg, rt)
+        return None, (ek, ev)
+
+    _, (eks, evs) = jax.lax.scan(body, None, dec_layers)
+    return dict(cache, cross_k=eks, cross_v=evs)
+
+
+def decode_stack_cached(x, dec_layers: dict, cfg: ModelConfig, rt: Runtime,
+                        cache: dict, pos) -> Tuple[jnp.ndarray, dict]:
+    def body(xc, inp):
+        p_l, self_c, ek, ev = inp
+        h = rmsnorm(xc, p_l["ln1"], cfg.norm_eps)
+        a, self_c = cached_attention(h, p_l["attn"], cfg, rt, self_c, pos)
+        xc = xc + a
+        h = rmsnorm(xc, p_l["lnx"], cfg.norm_eps)
+        xc = xc + cross_attention(h, p_l["xattn"], cfg, rt, ek, ev)
+        h = rmsnorm(xc, p_l["ln2"], cfg.norm_eps)
+        return xc + mlp(h, p_l["mlp"], cfg, rt), self_c
+
+    x, new_self = jax.lax.scan(
+        body, x, (dec_layers, cache["self"], cache["cross_k"], cache["cross_v"]))
+    return x, dict(cache, self=new_self)

@@ -1,0 +1,175 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + ONE shared attention(+MLP) block
+applied after every `shared_attn_every` SSM layers (weights reused each
+application). Segments of SSM layers are scanned; the shared block is unrolled
+per application (n_app = L // every), each application with its own KV cache.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (
+    cached_attention,
+    init_attention,
+    init_kv_cache,
+    self_attention,
+)
+from repro.models.layers import init_mlp, mlp, rmsnorm
+from repro.models.mamba2 import (
+    init_ssm_block,
+    init_ssm_cache,
+    ssm_block,
+    ssm_block_decode,
+)
+from repro.models.runtime import Runtime
+
+
+def n_applications(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.shared_attn_every
+
+
+def _tree_slice(tree, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def init_hybrid_layers(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "ssm_layers": init_ssm_block(ks[0], cfg, (cfg.num_layers,)),
+        "shared": {
+            "ln1": jnp.zeros((cfg.d_model,)),
+            "attn": init_attention(ks[1], cfg),
+            "ln2": jnp.zeros((cfg.d_model,)),
+            "mlp": init_mlp(ks[2], cfg, cfg.d_ff),
+        },
+    }
+
+
+def _shared_block(x, shared, cfg: ModelConfig, rt: Runtime, positions):
+    h = rmsnorm(x, shared["ln1"], cfg.norm_eps)
+    x = x + self_attention(h, shared["attn"], cfg, rt, positions)
+    h = rmsnorm(x, shared["ln2"], cfg.norm_eps)
+    return x + mlp(h, shared["mlp"], cfg, rt)
+
+
+def _scan_ssm(x, seg_params, cfg: ModelConfig, rt: Runtime):
+    def body(xc, p_l):
+        return ssm_block(xc, p_l, cfg, rt), None
+
+    if rt.remat == "block":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = jax.lax.scan(body, x, seg_params)
+    return x
+
+
+def hybrid_forward(x, layers: dict, cfg: ModelConfig, rt: Runtime, positions
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    every = cfg.shared_attn_every
+    n_app = n_applications(cfg)
+    rem = cfg.num_layers - n_app * every
+    for i in range(n_app):
+        seg = _tree_slice(layers["ssm_layers"], i * every, (i + 1) * every)
+        x = _scan_ssm(x, seg, cfg, rt)
+        x = _shared_block(x, layers["shared"], cfg, rt, positions)
+    if rem:
+        seg = _tree_slice(layers["ssm_layers"], n_app * every, cfg.num_layers)
+        x = _scan_ssm(x, seg, cfg, rt)
+    return x, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_hybrid_cache(cfg: ModelConfig, batch: int, max_len: int, rt: Runtime
+                      ) -> dict:
+    return {
+        "ssm": init_ssm_cache(cfg, batch, cfg.num_layers, rt),
+        "attn": init_kv_cache(cfg, batch, max_len, n_applications(cfg), rt),
+    }
+
+
+def _scan_ssm_decode(x, seg_params, seg_cache, cfg, rt):
+    def body(xc, inp):
+        p_l, cache_l = inp
+        xc, new_cache = ssm_block_decode(xc, p_l, cfg, rt, cache_l)
+        return xc, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (seg_params, seg_cache))
+    return x, new_cache
+
+
+def hybrid_decode(x, layers: dict, cfg: ModelConfig, rt: Runtime,
+                  cache: dict, pos) -> Tuple[jnp.ndarray, dict]:
+    every = cfg.shared_attn_every
+    n_app = n_applications(cfg)
+    rem = cfg.num_layers - n_app * every
+    new_ssm, new_attn = [], []
+    for i in range(n_app):
+        seg_p = _tree_slice(layers["ssm_layers"], i * every, (i + 1) * every)
+        seg_c = _tree_slice(cache["ssm"], i * every, (i + 1) * every)
+        x, nc = _scan_ssm_decode(x, seg_p, seg_c, cfg, rt)
+        new_ssm.append(nc)
+        h = rmsnorm(x, layers["shared"]["ln1"], cfg.norm_eps)
+        attn_cache_i = jax.tree.map(lambda a: a[i], cache["attn"])
+        a_out, attn_cache_i = cached_attention(
+            h, layers["shared"]["attn"], cfg, rt, attn_cache_i, pos)
+        x = x + a_out
+        h = rmsnorm(x, layers["shared"]["ln2"], cfg.norm_eps)
+        x = x + mlp(h, layers["shared"]["mlp"], cfg, rt)
+        new_attn.append(attn_cache_i)
+    if rem:
+        seg_p = _tree_slice(layers["ssm_layers"], n_app * every, cfg.num_layers)
+        seg_c = _tree_slice(cache["ssm"], n_app * every, cfg.num_layers)
+        x, nc = _scan_ssm_decode(x, seg_p, seg_c, cfg, rt)
+        new_ssm.append(nc)
+    ssm_cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_ssm)
+    attn_cache = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *new_attn)
+    return x, {"ssm": ssm_cache, "attn": attn_cache}
+
+
+def hybrid_prefill(x, layers: dict, cfg: ModelConfig, rt: Runtime,
+                   cache: dict, pos) -> Tuple[jnp.ndarray, dict]:
+    """Prefill: full-sequence SSM forward (final states captured) + cache fill
+    for the shared attention applications."""
+    from repro.models.mamba2 import ssm_block_prefill  # local import (cycle)
+    every = cfg.shared_attn_every
+    n_app = n_applications(cfg)
+    rem = cfg.num_layers - n_app * every
+    positions = pos + jnp.arange(x.shape[1])[None, :]
+    positions = jnp.broadcast_to(positions, x.shape[:2]).astype(jnp.int32)
+    new_ssm, new_attn = [], []
+
+    def scan_prefill(xc, seg_p, seg_c):
+        def body(xcc, inp):
+            p_l, c_l = inp
+            xcc, nc = ssm_block_prefill(xcc, p_l, cfg, rt, c_l)
+            return xcc, nc
+        return jax.lax.scan(body, xc, (seg_p, seg_c))
+
+    for i in range(n_app):
+        seg_p = _tree_slice(layers["ssm_layers"], i * every, (i + 1) * every)
+        seg_c = _tree_slice(cache["ssm"], i * every, (i + 1) * every)
+        x, nc = scan_prefill(x, seg_p, seg_c)
+        new_ssm.append(nc)
+        h = rmsnorm(x, layers["shared"]["ln1"], cfg.norm_eps)
+        attn_cache_i = jax.tree.map(lambda a: a[i], cache["attn"])
+        a_out, attn_cache_i = cached_attention(
+            h, layers["shared"]["attn"], cfg, rt, attn_cache_i, pos)
+        x = x + a_out
+        h = rmsnorm(x, layers["shared"]["ln2"], cfg.norm_eps)
+        x = x + mlp(h, layers["shared"]["mlp"], cfg, rt)
+        new_attn.append(attn_cache_i)
+    if rem:
+        seg_p = _tree_slice(layers["ssm_layers"], n_app * every, cfg.num_layers)
+        seg_c = _tree_slice(cache["ssm"], n_app * every, cfg.num_layers)
+        x, nc = scan_prefill(x, seg_p, seg_c)
+        new_ssm.append(nc)
+    ssm_cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_ssm)
+    attn_cache = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *new_attn)
+    return x, {"ssm": ssm_cache, "attn": attn_cache}

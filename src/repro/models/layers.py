@@ -1,0 +1,119 @@
+"""Shared primitives: norms, RoPE, MLP, init helpers. Pure JAX, functional."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.runtime import Runtime
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * s).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + g.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def gated_rmsnorm(x: jnp.ndarray, z: jnp.ndarray, g: jnp.ndarray,
+                  eps: float = 1e-6) -> jnp.ndarray:
+    """Mamba-2 output norm: rmsnorm(x * silu(z))."""
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + g.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x (B, S, H, hd), positions (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, :, None] * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]           # (B, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp(h: jnp.ndarray, p: dict, cfg: ModelConfig, rt: Runtime) -> jnp.ndarray:
+    """Gated (SwiGLU/GeGLU) or plain 2-layer MLP. h (B, S, D)."""
+    f = act_fn(cfg.act)
+    wi = p["wi"].astype(rt.compute_dtype)
+    wo = p["wo"].astype(rt.compute_dtype)
+    if cfg.glu:
+        wg = p["wg"].astype(rt.compute_dtype)
+        u = f(h @ wg) * (h @ wi)
+    else:
+        u = f(h @ wi)
+    return u @ wo
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int, stack: tuple = ()) -> dict:
+    D = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], (*stack, D, d_ff)),
+         "wo": dense_init(ks[1], (*stack, d_ff, D))}
+    if cfg.glu:
+        p["wg"] = dense_init(ks[2], (*stack, D, d_ff))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+
+def causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                          state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Per-channel causal 1-D conv. x (B, S, C), w (K, C), b (C,).
+    If `state` (B, K-1, C) is given, it is prepended (decode path)."""
+    K = w.shape[0]
+    xf = x.astype(jnp.float32)
+    if state is not None:
+        xf = jnp.concatenate([state.astype(jnp.float32), xf], axis=1)
+    else:
+        xf = jnp.pad(xf, ((0, 0), (K - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = sum(xf[:, i:i + S, :] * w.astype(jnp.float32)[i][None, None, :]
+              for i in range(K))
+    out = out + b.astype(jnp.float32)[None, None, :]
+    return jax.nn.silu(out).astype(x.dtype)

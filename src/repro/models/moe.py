@@ -1,0 +1,94 @@
+"""Top-k MoE layer (Mixtral/Grok-style, GShard-style capacity dispatch).
+
+Shape-stable dispatch suitable for SPMD: tokens are scattered into a
+(E, C, D) buffer (one slot per (token, choice) that fits capacity), expert
+FFNs run as batched einsums over the expert dim (sharded over the `model`
+axis = expert parallelism; the scatter/gather lowers to all-to-all under
+SPMD), and outputs are combined with the router weights. Overflow tokens drop
+(capacity_factor 1.25 keeps drops rare at LLM batch sizes).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import act_fn, dense_init
+from repro.models.runtime import Runtime
+
+
+def init_moe(key, cfg: ModelConfig, stack: tuple = ()) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (*stack, D, E)),
+        "wi": dense_init(ks[1], (*stack, E, D, F)),
+        "wo": dense_init(ks[2], (*stack, E, F, D)),
+    }
+    if cfg.glu:
+        p["wg"] = dense_init(ks[3], (*stack, E, D, F))
+    return p
+
+
+def moe_mlp(h: jnp.ndarray, p: dict, cfg: ModelConfig, rt: Runtime
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    B, S, D = h.shape
+    E, K = cfg.moe.num_experts, cfg.moe.top_k
+    T = B * S
+    ht = h.reshape(T, D)
+
+    logits = (ht @ p["router"].astype(rt.compute_dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    top_w, top_i = jax.lax.top_k(probs, K)                     # (T, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    C = max(1, int(cfg.moe.capacity_factor * K * T / E))
+    C = min(C, T)
+    if T <= 256:
+        # tiny token counts (decode steps): capacity = T guarantees no drops,
+        # keeping decode numerics identical to full-forward at negligible cost
+        C = T
+
+    # position of each (token, choice) within its expert queue
+    flat_e = top_i.reshape(T * K)                              # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # (T*K, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - onehot              # count of earlier
+    pos = jnp.take_along_axis(pos_all, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < C
+    slot = jnp.where(keep, pos, C)                             # overflow slot C
+
+    # dispatch: (E, C+1, D); slot C is the trash row
+    tok = jnp.repeat(ht, K, axis=0)                            # (T*K, D)
+    buf = jnp.zeros((E, C + 1, D), rt.compute_dtype)
+    buf = buf.at[flat_e, slot].set(tok.astype(rt.compute_dtype))
+    xin = buf[:, :C]                                           # (E, C, D)
+    if rt.moe_buf_spec is not None:
+        xin = jax.lax.with_sharding_constraint(xin, rt.moe_buf_spec)
+
+    f = act_fn(cfg.act)
+    wi = p["wi"].astype(rt.compute_dtype)
+    wo = p["wo"].astype(rt.compute_dtype)
+    if cfg.glu:
+        wg = p["wg"].astype(rt.compute_dtype)
+        u = f(jnp.einsum("ecd,edf->ecf", xin, wg)) * \
+            jnp.einsum("ecd,edf->ecf", xin, wi)
+    else:
+        u = f(jnp.einsum("ecd,edf->ecf", xin, wi))
+    eout = jnp.einsum("ecf,efd->ecd", u, wo)                   # (E, C, D)
+
+    # combine: gather each (token, choice) back and weight
+    eout_pad = jnp.concatenate(
+        [eout, jnp.zeros((E, 1, D), eout.dtype)], axis=1)      # trash row = 0
+    gathered = eout_pad[flat_e, slot]                          # (T*K, D)
+    w = (top_w.reshape(T * K) * keep).astype(rt.compute_dtype)
+    out = (gathered * w[:, None]).reshape(T, K, D).sum(axis=1)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,43 @@
+"""Runtime options threaded through every model forward pass."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    use_pallas: bool = False        # flash-attn / SSD Pallas kernels (TPU)
+    interpret: bool = False         # Pallas interpret mode (CPU validation)
+    remat: str = "block"            # none | block  (checkpoint each layer)
+    ring_cache: bool = False        # windowed layers use ring-buffer KV caches
+    ssd_chunk: int = 128
+    # sharding constraint (PartitionSpec) for the MoE dispatch buffer
+    # (E, C, D); prevents SPMD from replicating the capacity buffer. Set by
+    # the launcher; None on single-device CPU runs.
+    moe_buf_spec: Any = None
+    # mesh axis sizes, e.g. {"pod": 2, "data": 16, "model": 16}; enables
+    # divisibility-aware attention activation constraints (head-parallel when
+    # heads divide the model axis, sequence-parallel otherwise). None = no
+    # constraints (single-device runs).
+    mesh_axes: Any = None
+    # decode cache update via dynamic-update-slice (keeps sequence-sharded
+    # caches sharded under SPMD). False reproduces the scatter baseline.
+    opt_cache_dus: bool = True
+    # SSD head-dim tensor parallelism (False reproduces the naive flat-TP
+    # baseline that reshards the packed in_proj output every layer)
+    opt_ssm_head_tp: bool = True
+    # long-prefill attention computes scores from bf16 operands with fp32
+    # MXU accumulation instead of materializing fp32 copies of Q/K/V
+    # (halves the prefill score traffic; numerics validated in tests)
+    opt_bf16_scores: bool = False
+    # gradient-accumulation dtype for microbatched training (fp32 default;
+    # bf16 halves the per-microbatch reduction bytes)
+    grad_acc_dtype: Any = jnp.float32
+
+
+CPU_TEST = Runtime(compute_dtype=jnp.float32, remat="none")

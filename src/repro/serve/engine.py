@@ -1,0 +1,128 @@
+"""Batched serving engine with continuous batching.
+
+Fixed decode batch of `slots`; finished slots are immediately refilled from
+the request queue (single-request prefill into a fresh B=1 cache, then the
+K/V/state tensors are spliced into the batched cache at that slot). Per-slot
+position vectors keep sequences independent. Straggler/pathological requests
+are bounded by `max_new_tokens`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.runtime import Runtime
+from repro.serve.serve_step import make_decode_step, sample_logits
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (P,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    output: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, rt: Runtime, params,
+                 slots: int = 4, max_len: int = 512,
+                 eos_token: Optional[int] = None):
+        if cfg.family in ("encdec", "vlm"):
+            raise NotImplementedError(
+                "engine supports decoder-only families; encdec/vlm use the "
+                "prefill/decode steps directly")
+        self.cfg, self.rt, self.params = cfg, rt, params
+        self.slots, self.max_len = slots, max_len
+        self.eos = eos_token
+        self.queue: deque[Request] = deque()
+        self.active: List[Optional[Request]] = [None] * slots
+        self.pos = np.zeros(slots, np.int32)
+        self.last_tok = np.zeros(slots, np.int32)
+        self.cache = M.init_cache(cfg, rt, slots, max_len)
+        self._decode = jax.jit(make_decode_step(cfg, rt), donate_argnums=(3,))
+        self._prefill1 = jax.jit(self._prefill_one)
+        self.rng = jax.random.PRNGKey(0)
+
+    # -- internals ----------------------------------------------------------
+
+    def _prefill_one(self, params, tokens):
+        cache = M.init_cache(self.cfg, self.rt, 1, self.max_len)
+        logits, cache = M.prefill(params, self.cfg, self.rt,
+                                  {"tokens": tokens}, cache)
+        return logits, cache
+
+    def _splice_cache(self, slot: int, cache1):
+        """Insert a B=1 cache into batch slot `slot` (axis 1 of every leaf
+        below the layer axis ... caches are (L, B, ...))."""
+        def splice(big, small):
+            return big.at[:, slot:slot + 1].set(small)
+        self.cache = jax.tree.map(splice, self.cache, cache1)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.popleft()
+                req.output = []
+                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                logits, cache1 = self._prefill1(self.params, toks)
+                self._splice_cache(slot, cache1)
+                self.rng, k = jax.random.split(self.rng)
+                first = int(sample_logits(logits, k, req.temperature)[0])
+                req.output.append(first)
+                self.active[slot] = req
+                self.pos[slot] = len(req.prompt)
+                self.last_tok[slot] = first
+
+    # -- public -------------------------------------------------------------
+
+    def submit(self, req: Request):
+        assert len(req.prompt) + req.max_new_tokens <= self.max_len
+        self.queue.append(req)
+
+    def step(self) -> int:
+        """One batched decode step; returns number of active slots."""
+        self._admit()
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return 0
+        tokens = jnp.asarray(self.last_tok, jnp.int32)[:, None]
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, tokens, pos, self.cache)
+        self.rng, k = jax.random.split(self.rng)
+        nxt = np.asarray(sample_logits(logits, k))
+        for s in live:
+            req = self.active[s]
+            tok = int(nxt[s])
+            req.output.append(tok)
+            self.pos[s] += 1
+            self.last_tok[s] = tok
+            done = (len(req.output) >= req.max_new_tokens
+                    or (self.eos is not None and tok == self.eos))
+            if done:
+                self.active[s] = None
+        return len(live)
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        for r in requests:
+            self.submit(r)
+        out: Dict[int, List[int]] = {}
+        pending = {r.rid: r for r in requests}
+        while pending:
+            self.step()
+            for rid, r in list(pending.items()):
+                if r.output is not None and (
+                        len(r.output) >= r.max_new_tokens
+                        or (self.eos is not None and r.output
+                            and r.output[-1] == self.eos)):
+                    if all(r is not a for a in self.active):
+                        out[rid] = r.output
+                        del pending[rid]
+        return out

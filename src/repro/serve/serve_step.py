@@ -1,0 +1,44 @@
+"""Serve-step factories: prefill_step (cache built in-graph) + decode_step +
+sampling. These are the functions the dry-run lowers for the decode/prefill
+shape cells and the engine jits for real serving.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.runtime import Runtime
+
+
+def make_prefill_step(cfg: ModelConfig, rt: Runtime, max_len: int) -> Callable:
+    """(params, batch) -> (last_logits, cache). Cache is created inside the
+    compiled graph (zeros), so input specs are just params + batch."""
+
+    def prefill_step(params, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        B = batch["tokens"].shape[0]
+        cache = M.init_cache(cfg, rt, B, max_len)
+        return M.prefill(params, cfg, rt, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, rt: Runtime) -> Callable:
+    """(params, tokens (B,1), pos scalar|(B,), cache) -> (logits, cache)."""
+
+    def decode_step(params, tokens, pos, cache):
+        return M.decode_step(params, cfg, rt, tokens, pos, cache)
+
+    return decode_step
+
+
+def sample_logits(logits: jnp.ndarray, rng, temperature: float = 0.0
+                  ) -> jnp.ndarray:
+    """Greedy (T=0) or temperature sampling. logits (B, V) -> (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        rng, logits.astype(jnp.float32) / temperature, axis=-1).astype(jnp.int32)

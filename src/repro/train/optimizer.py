@@ -1,0 +1,86 @@
+"""AdamW + gradient clipping + LR schedules in pure JAX (no optax)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_schedule(c: AdamWConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = c.peak_lr * jnp.minimum(1.0, step / max(c.warmup_steps, 1))
+        prog = jnp.clip((step - c.warmup_steps)
+                        / max(c.total_steps - c.warmup_steps, 1), 0.0, 1.0)
+        cos = c.min_lr_ratio + (1 - c.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < c.warmup_steps, warm, c.peak_lr * cos)
+    return fn
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        tree), norm
+
+
+def init_opt_state(params) -> Dict:
+    zeros = lambda t: jax.tree.map(  # noqa: E731
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {"step": jnp.zeros((), jnp.int32), "m": zeros(params),
+            "v": zeros(params)}
+
+
+def adamw_update(params, grads, opt_state: Dict, c: AdamWConfig
+                 ) -> Tuple[Dict, Dict, Dict]:
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, c.clip_norm)
+    step = opt_state["step"] + 1
+    lr = lr_schedule(c)(step)
+    b1, b2 = c.b1, c.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        pf = p.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * gf * gf
+        mhat = m / bc1
+        vhat = v / bc2
+        newp = pf - lr * (mhat / (jnp.sqrt(vhat) + c.eps)
+                          + c.weight_decay * pf)
+        return newp.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, {"step": step, "m": new_m, "v": new_v}, metrics

@@ -1,0 +1,92 @@
+"""Train-step factory: microbatched grad accumulation + AdamW + optional
+int8 gradient compression across the data axes.
+
+The returned step is a pure function (params, opt_state, batch) ->
+(params, opt_state, metrics); the launcher jits it with shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.runtime import Runtime
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def _split_microbatches(batch: Dict, n_mb: int) -> Dict:
+    def rs(x):
+        B = x.shape[0]
+        assert B % n_mb == 0, (B, n_mb)
+        return x.reshape(n_mb, B // n_mb, *x.shape[1:])
+    return jax.tree.map(rs, batch)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    rt: Runtime,
+    opt: AdamWConfig,
+    microbatches: int = 1,
+    grad_transform: Optional[Callable] = None,
+) -> Callable:
+    """grad_transform: optional fn(grads) -> grads applied before the update
+    (e.g. dist.collectives.int8_compress_decompress for compressed DP)."""
+
+    def loss_of(params, mb):
+        loss, metrics = M.loss_fn(params, cfg, rt, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def train_step(params, opt_state, batch
+                   ) -> Tuple[Dict, Dict, Dict]:
+        if microbatches > 1:
+            mbs = _split_microbatches(batch, microbatches)
+            acc_dtype = rt.grad_acc_dtype
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                (loss, _), grads = grad_fn(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(acc_dtype), gsum, grads)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, rt.grad_acc_dtype), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                acc, (zeros, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32) / microbatches), gsum)
+            loss = lsum / microbatches
+        else:
+            (loss, _), grads = grad_fn(params, batch)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, rt: Runtime) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = M.loss_fn(params, cfg, rt, batch)
+        return {"loss": loss, **metrics}
+    return eval_step
+
+
+@functools.lru_cache(maxsize=None)
+def default_microbatches(arch_name: str, seq_len: int, global_batch: int) -> int:
+    """Per-cell grad-accumulation defaults sized so activations fit v5e HBM
+    (tuned by the dry-run memory analysis; see EXPERIMENTS.md §Dry-run and
+    §Perf OPT-C — grok ships mb=8 after the FSDP re-gather hillclimb)."""
+    big = {"grok-1-314b": 8, "qwen1.5-32b": 8, "mixtral-8x7b": 8,
+           "gemma3-4b": 4, "paligemma-3b": 4}
+    return big.get(arch_name, 2 if global_batch >= 256 else 1)

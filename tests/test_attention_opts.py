@@ -1,0 +1,55 @@
+"""Optimized attention paths vs the fp32 oracle (EXPERIMENTS.md §Perf)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models import model as M
+from repro.models.attention import _attention_bf16_scores
+from repro.models.runtime import CPU_TEST as RT
+
+
+@pytest.mark.parametrize("window", [None, 16])
+def test_bf16_scores_matches_oracle(window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, Hq, Hkv, hd = 2, 64, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, S, Hq, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    a = _attention_bf16_scores(q, k, v, pos, pos, causal=True, window=window)
+    b = attention_ref(q, k, v, pos, pos, causal=True, window=window)
+    err = np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32)).max()
+    assert err < 3e-2, err
+
+
+def test_opt_bf16_scores_decode_consistency():
+    """End-to-end decode with the bf16-score runtime flag stays close to the
+    fp32 path."""
+    cfg = reduced_config("qwen2-0.5b")
+    rt_opt = dataclasses.replace(RT, opt_bf16_scores=True,
+                                 compute_dtype=jnp.bfloat16)
+    rt_ref = dataclasses.replace(RT, compute_dtype=jnp.bfloat16)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (1, 12), 0, cfg.vocab)
+
+    def roll(rt):
+        cache = M.init_cache(cfg, rt, 1, 32)
+        logits, cache = M.prefill(params, cfg, rt,
+                                  {"tokens": tokens[:, :8]}, cache)
+        outs = [np.asarray(logits)]
+        for t in range(8, 12):
+            logits, cache = M.decode_step(params, cfg, rt,
+                                          tokens[:, t:t + 1],
+                                          jnp.int32(t), cache)
+            outs.append(np.asarray(logits))
+        return np.stack(outs)
+
+    a, b = roll(rt_opt), roll(rt_ref)
+    # same argmax everywhere; logits close
+    np.testing.assert_array_equal(a.argmax(-1), b.argmax(-1))
+    assert np.abs(a - b).max() < 0.5

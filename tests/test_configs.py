@@ -1,0 +1,83 @@
+"""Config integrity: every assigned arch loads, matches its advertised
+geometry, and its parameter count lands near the advertised size."""
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+
+EXPECT = {
+    "whisper-small": dict(layers=12, d_model=768, heads=12, kv=12,
+                          d_ff=3072, vocab=51865),
+    "qwen1.5-32b": dict(layers=64, d_model=5120, heads=40, kv=40,
+                        d_ff=27392, vocab=152064),
+    "qwen2-0.5b": dict(layers=24, d_model=896, heads=14, kv=2,
+                       d_ff=4864, vocab=151936),
+    "smollm-135m": dict(layers=30, d_model=576, heads=9, kv=3,
+                        d_ff=1536, vocab=49152),
+    "gemma3-4b": dict(layers=34, d_model=2560, heads=8, kv=4,
+                      d_ff=10240, vocab=262144),
+    "mamba2-370m": dict(layers=48, d_model=1024, heads=0, kv=0,
+                        d_ff=0, vocab=50280),
+    "mixtral-8x7b": dict(layers=32, d_model=4096, heads=32, kv=8,
+                         d_ff=14336, vocab=32000),
+    "grok-1-314b": dict(layers=64, d_model=6144, heads=48, kv=8,
+                        d_ff=32768, vocab=131072),
+    "zamba2-1.2b": dict(layers=38, d_model=2048, heads=32, kv=32,
+                        d_ff=8192, vocab=32000),
+    "paligemma-3b": dict(layers=18, d_model=2048, heads=8, kv=1,
+                         d_ff=16384, vocab=257216),
+}
+
+# advertised sizes (params); tolerance is generous because frontends are
+# stubs and architectural details (biases/norms) differ slightly
+SIZES = {
+    "whisper-small": (0.244e9, 0.25),
+    "qwen1.5-32b": (32.5e9, 0.25),
+    "qwen2-0.5b": (0.5e9, 0.4),
+    "smollm-135m": (0.135e9, 0.25),
+    "gemma3-4b": (4.3e9, 0.4),
+    "mamba2-370m": (0.37e9, 0.3),
+    "mixtral-8x7b": (46.7e9, 0.25),
+    "grok-1-314b": (314e9, 0.25),
+    "zamba2-1.2b": (1.2e9, 0.45),
+    "paligemma-3b": (2.9e9, 0.4),     # text tower only (vision is a stub)
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_config_geometry(arch):
+    cfg = get_config(arch)
+    e = EXPECT[arch]
+    assert cfg.num_layers == e["layers"]
+    assert cfg.d_model == e["d_model"]
+    assert cfg.n_heads == e["heads"]
+    assert cfg.n_kv == e["kv"]
+    assert cfg.d_ff == e["d_ff"]
+    assert cfg.vocab == e["vocab"]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_near_advertised(arch):
+    cfg = get_config(arch)
+    target, tol = SIZES[arch]
+    n = cfg.param_count()
+    assert abs(n - target) / target < tol, (arch, n, target)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_config_same_family(arch):
+    cfg, red = get_config(arch), reduced_config(arch)
+    assert cfg.family == red.family
+    assert red.d_model <= 128 and red.num_layers <= 4
+    if cfg.moe:
+        assert red.moe and red.moe.top_k == cfg.moe.top_k
+    if cfg.ssm:
+        assert red.ssm is not None
+    if cfg.local_global_pattern:
+        assert red.local_global_pattern is not None
+
+
+def test_moe_active_params():
+    cfg = get_config("mixtral-8x7b")
+    assert cfg.active_param_count() < cfg.param_count()
+    # ~12.9B active for mixtral
+    assert 9e9 < cfg.active_param_count() < 16e9

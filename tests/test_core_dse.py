@@ -1,0 +1,206 @@
+"""Theseus DSE core: yield models, design space, validator, tile eval,
+compiler, NoC models, chunk eval."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import components as C
+from repro.core.compiler import Strategy, compile_chunk, enumerate_strategies
+from repro.core.design_space import WSCDesign, decode, encode, sample
+from repro.core.evaluator import evaluate_design, wafers_for_budget
+from repro.core.noc_analytical import chunk_latency_cycles
+from repro.core.noc_sim import Packet, chunk_latency_cycles_sim, simulate
+from repro.core.tile_eval import evaluate_tile
+from repro.core.validator import validate
+from repro.core.workload import GEMMOp, GPT_BENCHMARKS, from_model_config
+from repro.core.yield_model import (
+    binomial_redundancy_yield,
+    core_yield_grid,
+    mc_row_redundancy_yield,
+    min_spares_for_target,
+    murphy_yield,
+)
+
+
+# --------------------------- yield -----------------------------------------
+
+
+def test_murphy_monotone_decreasing_in_area():
+    ys = [murphy_yield(a) for a in (1, 10, 100, 400)]
+    assert all(ys[i] > ys[i + 1] for i in range(len(ys) - 1))
+    assert 0.99 < murphy_yield(1.0) <= 1.0
+
+
+def test_binomial_matches_mc_uniform():
+    """Eq. 4 closed form vs Monte Carlo with uniform yields, column spares:
+    p=8 operational + 2 spares, reticle OK iff >= 8 good."""
+    y = 0.97
+    analytic = binomial_redundancy_yield(8, 2, y)
+    rng = np.random.default_rng(0)
+    good = (rng.random((200000, 10)) < y).sum(axis=1)
+    mc = float((good >= 8).mean())
+    assert analytic == pytest.approx(mc, abs=5e-3)
+
+
+def test_stress_holes_hurt_corner_cores():
+    ys = core_yield_grid(1.0, 1.0, (8, 8), (8.0, 8.0))
+    assert ys[0, 0] < ys[4, 4]           # corner core near screw hole
+    assert ys.min() > 0.5
+
+
+def test_row_redundancy_improves_yield():
+    ys = core_yield_grid(2.0, 2.0, (8, 8), (16.0, 16.0), tsv_region_mm2=4.0)
+    y0 = mc_row_redundancy_yield(ys, 0)
+    y2 = mc_row_redundancy_yield(ys, 2)
+    assert y2 > y0
+
+
+def test_die_stitching_needs_more_redundancy():
+    """KGD (InFO) only needs the reticle to yield; stitching needs the whole
+    wafer: spares(stitching) >= spares(infosow)."""
+    args = (1.5, 1.5, (10, 10), (15.0, 15.0), 2.0, 64)
+    s_info, _ = min_spares_for_target(*args, "infosow")
+    s_stitch, _ = min_spares_for_target(*args, "die_stitching")
+    assert s_info >= 0
+    assert s_stitch == -1 or s_stitch >= s_info
+
+
+# --------------------------- design space ----------------------------------
+
+
+def test_decode_respects_candidate_ranges():
+    rng = np.random.default_rng(0)
+    for u in sample(rng, 64):
+        d = decode(u)
+        assert d.dataflow in ("WS", "IS", "OS")
+        assert 8 <= d.mac_num <= 4096 and d.mac_num & (d.mac_num - 1) == 0
+        assert 32 <= d.buffer_kb <= 2048
+        assert 0.2 <= d.inter_reticle_bw_ratio <= 2.0
+        assert 0.25 <= d.dram_bw_tbps_per_100mm2 <= 4.0
+
+
+def test_encode_decode_roundtrip():
+    rng = np.random.default_rng(1)
+    for u in sample(rng, 16):
+        d = decode(u)
+        d2 = decode(encode(d))
+        assert d2.mac_num == d.mac_num
+        assert d2.dataflow == d.dataflow
+        assert d2.core_array == d.core_array
+        assert d2.integration == d.integration
+
+
+def test_validator_reasons():
+    huge = WSCDesign(mac_num=4096, buffer_kb=2048, buffer_bw=2048,
+                     core_array=(32, 32), reticle_array=(12, 12))
+    r = validate(huge)
+    assert not r.ok and r.reason in ("reticle_area", "tsv_stress",
+                                     "sram_infeasible", "wafer_area")
+    ok = validate(WSCDesign())
+    assert ok.ok and ok.design.spares_per_row >= 0
+    assert ok.wafer_yield >= 0.9
+
+
+def test_tsv_stress_constraint():
+    d = WSCDesign(use_stacked_dram=True, dram_bw_tbps_per_100mm2=4.0)
+    ratio = d.tsv_area_mm2() / d.reticle_area_mm2()
+    assert ratio <= C.TSV_AREA_RATIO_MAX + 1e-6   # 4 TB/s sits inside 1.5%
+
+
+# --------------------------- tile eval --------------------------------------
+
+
+def test_tile_eval_compute_bound_scaling():
+    op = GEMMOp("g", 256, 256, 256)
+    small = evaluate_tile(op, mac=64, buffer_kb=256, buffer_bw=4096,
+                          dataflow="WS")
+    big = evaluate_tile(op, mac=1024, buffer_kb=256, buffer_bw=4096,
+                        dataflow="WS")
+    assert big.cycles < small.cycles          # more MACs -> fewer cycles
+    assert small.cycles >= 256 * 256 * 256 / 64 * 0.9
+
+
+def test_tile_eval_memory_bound():
+    op = GEMMOp("g", 4, 4096, 4096)           # GEMV-ish: low intensity
+    r = evaluate_tile(op, mac=4096, buffer_kb=64, buffer_bw=64,
+                      dataflow="WS")
+    compute = math.ceil(4096 / 64) * math.ceil(4096 / 64) * 4
+    assert r.cycles > compute                  # SRAM-bandwidth bound
+
+
+@pytest.mark.parametrize("df", ["WS", "IS", "OS"])
+def test_tile_eval_dataflows_all_finite(df):
+    r = evaluate_tile(GEMMOp("g", 128, 512, 256), 256, 128, 1024, df)
+    assert r.cycles > 0 and 0 < r.util <= 1.0
+    assert r.sram_read_bits > 0
+
+
+# --------------------------- compiler / NoC --------------------------------
+
+
+def _design():
+    return validate(WSCDesign()).design
+
+
+def test_compile_chunk_transfer_conservation():
+    d = _design()
+    wl = GPT_BENCHMARKS[0]
+    g = compile_chunk(d, wl, tp=16, mb_tokens=2048, cores_per_chunk=64)
+    assert g.n_cores == 64
+    for t, node in zip(g.transfers, g.ops[:-1]):
+        total = t.total_bytes()
+        gw = g.array[1]
+        expect = node.op.out_bytes() * (gw - 1)    # row all-gather traffic
+        assert total == pytest.approx(expect, rel=1e-6)
+
+
+def test_strategies_respect_resources():
+    d = _design()
+    wl = GPT_BENCHMARKS[0]
+    total = d.total_cores()
+    for s in enumerate_strategies(d, wl, n_wafers=1):
+        assert s.chunks() * s.tp <= total
+        assert wl.batch % (s.dp * s.microbatches) == 0
+
+
+def test_noc_sim_congestion_increases_wait():
+    light = [Packet(0, 7, 4, i * 50.0) for i in range(4)]
+    heavy = [Packet(0, 7, 64, 0.0) for _ in range(16)]
+    r_light = simulate(light, W=8)
+    r_heavy = simulate(heavy, W=8)
+    wait_l = sum(r_light.link_wait.values())
+    wait_h = sum(r_heavy.link_wait.values())
+    assert wait_h > wait_l
+    assert r_heavy.makespan >= 16 * 64       # serialization on first link
+
+
+def test_analytical_within_factor_of_sim():
+    d = _design()
+    wl = GPT_BENCHMARKS[0]
+    g = compile_chunk(d, wl, tp=16, mb_tokens=2048, cores_per_chunk=64)
+    ana = chunk_latency_cycles(g, d)
+    sim = chunk_latency_cycles_sim(g, d)
+    assert 0.2 < ana / sim < 5.0
+
+
+# --------------------------- evaluator --------------------------------------
+
+
+def test_evaluate_design_feasible_and_scales():
+    d = _design()
+    wl = GPT_BENCHMARKS[0]
+    r1 = evaluate_design(d, wl, n_wafers=1, max_strategies=8)
+    r4 = evaluate_design(d, wl, n_wafers=4, max_strategies=8)
+    assert r1.feasible and r4.feasible
+    assert r4.throughput > r1.throughput        # more silicon helps
+    assert r1.power_w > 0
+
+
+def test_workload_bridge_from_model_config():
+    from repro.configs import get_config, get_shape
+    cfg = get_config("mixtral-8x7b")
+    wl = from_model_config(cfg, get_shape("train_4k"))
+    assert wl.moe_experts == 8 and wl.moe_topk == 2
+    assert wl.seq == 4096 and wl.phase == "train"
+    assert wl.tokens_per_step() == 256 * 4096

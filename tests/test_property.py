@@ -1,0 +1,116 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.ehvi import ehvi_2d
+from repro.core.pareto import hypervolume_2d, pareto_front
+from repro.kernels.flash_attention.ref import attention_ref, make_mask
+from repro.models.attention import update_cache_layer
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# --------------------------- attention masks --------------------------------
+
+
+@given(sq=st.integers(1, 12), skv=st.integers(1, 16),
+       window=st.one_of(st.none(), st.integers(1, 8)))
+@settings(**SETTINGS)
+def test_mask_causality(sq, skv, window):
+    qp = jnp.broadcast_to(jnp.arange(sq), (1, sq))
+    kp = jnp.broadcast_to(jnp.arange(skv), (1, skv))
+    m = np.asarray(make_mask(qp, kp, causal=True, window=window))[0]
+    ii, jj = np.meshgrid(np.arange(sq), np.arange(skv), indexing="ij")
+    assert not (m & (jj > ii)).any()                     # no future peeking
+    if window is not None:
+        assert not (m & (jj <= ii - window)).any()       # window respected
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_attention_rows_are_convex_combinations(seed):
+    """Each output is inside the convex hull of V rows: max |out| <= max |V|."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B, S, H, hd = 1, 8, 2, 4
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    out = np.asarray(attention_ref(q, k, v, pos, pos, causal=True))
+    assert np.abs(out).max() <= np.abs(np.asarray(v)).max() + 1e-5
+
+
+@given(w=st.integers(2, 8), steps=st.integers(1, 20))
+@settings(**SETTINGS)
+def test_ring_cache_keeps_newest_positions(w, steps):
+    """After writing positions 0..steps-1 into a ring of W slots, the cache
+    holds exactly the newest min(steps, W) positions."""
+    cache = {"k": jnp.zeros((1, w, 1, 2)), "v": jnp.zeros((1, w, 1, 2)),
+             "kv_pos": jnp.full((1, w), -1, jnp.int32)}
+    for t in range(steps):
+        kn = jnp.full((1, 1, 1, 2), float(t))
+        cache = update_cache_layer(cache, kn, kn, jnp.int32(t))
+    held = set(np.asarray(cache["kv_pos"][0]).tolist()) - {-1}
+    expect = set(range(max(0, steps - w), steps))
+    assert held == expect
+    # slot contents match their recorded position
+    for slot, p in enumerate(np.asarray(cache["kv_pos"][0])):
+        if p >= 0:
+            assert float(cache["k"][0, slot, 0, 0]) == float(p)
+
+
+# --------------------------- pareto / EHVI ----------------------------------
+
+
+@given(n=st.integers(1, 20), seed=st.integers(0, 999))
+@settings(**SETTINGS)
+def test_pareto_front_is_mutually_nondominated(n, seed):
+    pts = np.random.default_rng(seed).random((n, 2))
+    front = pareto_front(pts)
+    for i in range(len(front)):
+        for j in range(len(front)):
+            if i != j:
+                assert not (np.all(front[j] >= front[i])
+                            and np.any(front[j] > front[i]))
+
+
+@given(n=st.integers(1, 15), seed=st.integers(0, 999))
+@settings(**SETTINGS)
+def test_hypervolume_monotone_under_adding_points(n, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 2))
+    ref = np.array([0.0, 0.0])
+    hv1 = hypervolume_2d(pts[:-1], ref) if n > 1 else 0.0
+    hv2 = hypervolume_2d(pts, ref)
+    assert hv2 >= hv1 - 1e-12
+    assert hv2 <= 1.0 + 1e-9                    # points live in unit square
+
+
+@given(seed=st.integers(0, 999))
+@settings(**SETTINGS)
+def test_ehvi_nonnegative_and_sigma_monotone_when_dominated(seed):
+    rng = np.random.default_rng(seed)
+    front = rng.random((4, 2)) + 1.0
+    ref = np.array([0.0, 0.0])
+    mu = rng.random((1, 2))                      # dominated region
+    lo = ehvi_2d(mu, np.array([[0.05, 0.05]]), front, ref)[0]
+    hi = ehvi_2d(mu, np.array([[1.0, 1.0]]), front, ref)[0]
+    assert lo >= -1e-12 and hi >= -1e-12
+    assert hi >= lo - 1e-9   # more uncertainty -> more improvement chance
+
+
+# --------------------------- optimizer --------------------------------------
+
+
+@given(seed=st.integers(0, 999), clip=st.floats(0.1, 5.0))
+@settings(**SETTINGS)
+def test_clip_never_increases_norm(seed, clip):
+    from repro.train.optimizer import clip_by_global_norm, global_norm
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.normal(size=7)),
+            "b": {"c": jnp.asarray(rng.normal(size=(3, 2)))}}
+    clipped, norm = clip_by_global_norm(tree, clip)
+    assert float(global_norm(clipped)) <= max(clip, float(norm)) + 1e-5

@@ -1,0 +1,109 @@
+"""Sharding rule engine: divisibility fallbacks + every assigned arch gets
+legal specs on the production mesh geometry (tested against a mesh shim —
+no 512 fake devices needed in the unit-test process)."""
+import types
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, get_shape
+from repro.dist import sharding as sh
+from repro.models import model as M
+from repro.models.runtime import Runtime
+
+
+class MeshShim:
+    """Duck-typed mesh: only .shape (mapping) and .axis_names are used by
+    the spec rules."""
+
+    def __init__(self, shape_map):
+        self.shape = shape_map
+        self.axis_names = tuple(shape_map)
+
+
+SINGLE = MeshShim({"data": 16, "model": 16})
+MULTI = MeshShim({"pod": 2, "data": 16, "model": 16})
+
+
+def _check_spec_legal(mesh, sds, spec):
+    used = set()
+    for dim, entry in enumerate(spec):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        size = 1
+        for a in axes:
+            assert a in mesh.axis_names, (spec, a)
+            assert a not in used, f"axis {a} used twice in {spec}"
+            used.add(a)
+            size *= mesh.shape[a]
+        assert sds.shape[dim] % size == 0, (sds.shape, spec, dim)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["pod1", "pod2"])
+def test_param_specs_legal(arch, mesh):
+    cfg = get_config(arch)
+    sds = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                         jax.random.PRNGKey(0))
+    specs = sh.param_specs(mesh, sds)
+    flat_s = jax.tree.leaves(sds)
+    flat_p = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    for s, p in zip(flat_s, flat_p):
+        _check_spec_legal(mesh, s, p)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_id", ["decode_32k", "long_500k"])
+def test_cache_specs_legal(arch, shape_id):
+    cfg = get_config(arch)
+    shape = get_shape(shape_id)
+    if shape_id == "long_500k" and not cfg.subquadratic:
+        pytest.skip("full attention: long_500k cell is skipped by design")
+    rt = Runtime()
+    sds = jax.eval_shape(
+        lambda: M.init_cache(cfg, rt, shape.global_batch, shape.seq_len))
+    specs = sh.cache_specs(SINGLE, sds)
+    for s, p in zip(jax.tree.leaves(sds),
+                    jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        _check_spec_legal(SINGLE, s, p)
+
+
+def test_tp_within_expert_fallback():
+    """8 experts cannot shard over a 16-wide model axis: EP must fall back
+    to TP-within-expert (F over model, D over dp)."""
+    cfg = get_config("mixtral-8x7b")
+    sds = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                         jax.random.PRNGKey(0))
+    specs = sh.param_specs(SINGLE, sds)
+    def axes_of(entry):
+        if entry is None:
+            return set()
+        return {entry} if isinstance(entry, str) else set(entry)
+
+    wi_spec = specs["layers"]["moe"]["wi"]      # (L, E, D, F)
+    assert wi_spec[1] is None                   # E=8 not divisible by 16
+    assert axes_of(wi_spec[3]) == {"model"}     # TP on F instead
+    assert axes_of(wi_spec[2]) == {"data"}
+
+
+def test_seq_sharding_for_batch1_cache():
+    """long_500k (B=1): sequence dim must spread over data+model axes."""
+    cfg = get_config("gemma3-4b")
+    rt = Runtime()
+    sds = jax.eval_shape(lambda: M.init_cache(cfg, rt, 1, 524288))
+    specs = sh.cache_specs(SINGLE, sds)
+    k_spec = specs["attn"]["k"]                 # (L, B, W, Hkv, hd)
+    assert k_spec[1] is None                    # B=1 unshardable
+    assert k_spec[2] == ("data", "model")       # kv heads 4 can't take model
+
+
+def test_vocab_not_divisible_falls_back():
+    """whisper vocab 51865 is odd: embed must not shard the vocab dim."""
+    cfg = get_config("whisper-small")
+    sds = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                         jax.random.PRNGKey(0))
+    specs = sh.param_specs(SINGLE, sds)
+    assert specs["embed"][0] is None

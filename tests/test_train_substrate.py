@@ -1,0 +1,195 @@
+"""Optimizer, data pipeline, checkpointing, fault tolerance, compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.dist.collectives import compress_grads, dequantize_int8, quantize_int8
+from repro.dist.fault import StragglerPolicy, TrainSupervisor
+from repro.models import model as M
+from repro.models.runtime import CPU_TEST as RT
+from repro.train import checkpoint as ckpt
+from repro.train.data import MarkovLMDataset
+from repro.train.optimizer import (
+    AdamWConfig,
+    adamw_update,
+    clip_by_global_norm,
+    init_opt_state,
+    lr_schedule,
+)
+from repro.train.train_step import make_train_step
+
+
+# --------------------------- optimizer ------------------------------------
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = AdamWConfig(peak_lr=0.2, warmup_steps=0, total_steps=200,
+                      weight_decay=0.0, clip_norm=10.0)
+    state = init_opt_state(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, opt)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_lr_schedule_shape():
+    c = AdamWConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                    min_lr_ratio=0.1)
+    f = lr_schedule(c)
+    assert float(f(jnp.int32(0))) == 0.0
+    assert abs(float(f(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(f(jnp.int32(100))) <= 0.11
+    assert float(f(jnp.int32(5))) == pytest.approx(0.5)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones(4) * 3.0, "b": jnp.ones(9) * 4.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    from repro.train.optimizer import global_norm
+    assert float(norm) == pytest.approx(np.sqrt(36 + 144), rel=1e-5)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = reduced_config("qwen2-0.5b")
+    rng = jax.random.PRNGKey(0)
+    params = M.init_params(rng, cfg)
+    opt = AdamWConfig(peak_lr=1e-3, clip_norm=1e9, weight_decay=0.0)
+    batch = {"tokens": jax.random.randint(rng, (4, 16), 0, cfg.vocab),
+             "labels": jax.random.randint(rng, (4, 16), 0, cfg.vocab)}
+    p1, _, m1 = make_train_step(cfg, RT, opt, microbatches=1)(
+        params, init_opt_state(params), batch)
+    p2, _, m2 = make_train_step(cfg, RT, opt, microbatches=2)(
+        params, init_opt_state(params), batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+# --------------------------- data -----------------------------------------
+
+
+def test_data_deterministic_and_host_disjoint():
+    ds0 = MarkovLMDataset(vocab=64, seq_len=16, batch=4, seed=7)
+    ds0b = MarkovLMDataset(vocab=64, seq_len=16, batch=4, seed=7)
+    np.testing.assert_array_equal(ds0.batch_at(3)["tokens"],
+                                  ds0b.batch_at(3)["tokens"])
+    h0 = MarkovLMDataset(vocab=64, seq_len=16, batch=4, seed=7,
+                         host_id=0, num_hosts=2)
+    h1 = MarkovLMDataset(vocab=64, seq_len=16, batch=4, seed=7,
+                         host_id=1, num_hosts=2)
+    assert not np.array_equal(h0.batch_at(3)["tokens"],
+                              h1.batch_at(3)["tokens"])
+    # labels are next-token shifted
+    b = ds0.batch_at(0)
+    assert b["tokens"].shape == b["labels"].shape == (4, 16)
+    assert 0.0 < ds0.conditional_entropy() < np.log(64)
+
+
+# --------------------------- checkpointing ---------------------------------
+
+
+def _tiny_state():
+    params = {"layer": {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+              "b": np.ones(3, np.float32)}
+    opt = {"step": np.int32(5), "m": {"layer": {"w": np.zeros((2, 3))},
+                                      "b": np.zeros(3)},
+           "v": {"layer": {"w": np.zeros((2, 3))}, "b": np.zeros(3)}}
+    return params, opt
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params, opt = _tiny_state()
+    ckpt.save_checkpoint(str(tmp_path), 10, params, opt)
+    restored = ckpt.restore_latest(str(tmp_path))
+    assert restored is not None
+    p2, o2, meta = restored
+    assert meta["step"] == 10
+    np.testing.assert_array_equal(p2["layer"]["w"], params["layer"]["w"])
+    assert int(o2["step"]) == 5
+
+
+def test_checkpoint_corruption_quarantine(tmp_path):
+    params, opt = _tiny_state()
+    ckpt.save_checkpoint(str(tmp_path), 1, params, opt)
+    ckpt.save_checkpoint(str(tmp_path), 2, params, opt)
+    # corrupt the newest checkpoint
+    with open(os.path.join(str(tmp_path), "step_2", "params.npz"), "wb") as f:
+        f.write(b"garbage")
+    p2, o2, meta = ckpt.restore_latest(str(tmp_path))
+    assert meta["step"] == 1                       # fell back
+    assert os.path.isdir(os.path.join(str(tmp_path), "step_2.corrupt"))
+
+
+def test_supervisor_restart_after_failures(tmp_path):
+    """Crash mid-training twice; supervisor must resume from checkpoints and
+    finish with a contiguous metric log."""
+    cfg = reduced_config("smollm-135m")
+    rng = jax.random.PRNGKey(0)
+    ds = MarkovLMDataset(vocab=cfg.vocab, seq_len=16, batch=4, seed=2)
+    opt = AdamWConfig(peak_lr=1e-3)
+    step_fn = jax.jit(make_train_step(cfg, RT, opt))
+
+    def init_fn():
+        return M.init_params(rng, cfg), init_opt_state(M.init_params(rng, cfg))
+
+    def batches(step):
+        return {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
+
+    fail_at = {7, 13}
+
+    def injector(step):
+        if step in fail_at:
+            fail_at.discard(step)
+            return True
+        return False
+
+    sup = TrainSupervisor(ckpt_dir=str(tmp_path), ckpt_every=5)
+    out = sup.run(init_fn, step_fn, batches, total_steps=16,
+                  failure_injector=injector)
+    assert out["restarts"] == 2
+    steps_seen = [m["step"] for m in out["metrics"]]
+    assert steps_seen[-1] == 15
+    assert ckpt.list_checkpoints(str(tmp_path))[-1] == 16
+
+
+def test_straggler_policy():
+    p = StragglerPolicy(tolerance=2.0)
+    for _ in range(10):
+        p.observe(1.0)
+    assert p.observe(5.0) is True
+    assert p.slow_steps == 1
+    assert p.observe(1.1) is False
+
+
+# --------------------------- compression -----------------------------------
+
+
+def test_int8_quantization_roundtrip():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=512) * 3)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x)).max()
+    assert err <= float(s) / 2 + 1e-6
+
+
+def test_compression_error_feedback_unbiased():
+    """With error feedback, the SUM of compressed grads over steps tracks
+    the sum of true grads (bias does not accumulate)."""
+    rng = np.random.default_rng(1)
+    g_true = {"w": jnp.asarray(rng.normal(size=256).astype(np.float32))}
+    err = None
+    acc = np.zeros(256)
+    for step in range(20):
+        g = {"w": g_true["w"] * (1 + 0.01 * step)}
+        cg, err = compress_grads(g, err)
+        acc += np.asarray(cg["w"])
+    true_acc = np.asarray(sum(
+        np.asarray(g_true["w"]) * (1 + 0.01 * s) for s in range(20)))
+    rel = np.abs(acc - true_acc).max() / np.abs(true_acc).max()
+    assert rel < 0.02
