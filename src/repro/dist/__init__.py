@@ -1,0 +1,4 @@
+"""Distributed-training substrate: sharding rules, compressed collectives,
+fault tolerance. Pure-python spec logic — importing this package never
+touches jax device state (the launchers build meshes themselves)."""
+from repro.dist import collectives, fault, sharding  # noqa: F401

@@ -117,8 +117,9 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     key = jax.random.PRNGKey(0)
     params_sds = jax.eval_shape(lambda k: M.init_params(k, cfg), key)
-    p_spec = sh.param_specs(mesh, params_sds,
-                            legacy_ssm=not rt.opt_ssm_head_tp)
+    # legacy vs head-TP SSM variants share the weight layout; the variant
+    # difference is the Runtime's activation constraints (opt_ssm_head_tp)
+    p_spec = sh.param_specs(mesh, params_sds)
     p_shard = sh.to_shardings(mesh, p_spec)
     batch_sds = M.input_specs(cfg, shape)
     b_spec = sh.batch_specs(mesh, batch_sds)

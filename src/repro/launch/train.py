@@ -41,9 +41,28 @@ def main(argv=None):
                     help="mesh data axis (1 on single device)")
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--fail-at", default="",
+                    help="comma-separated step indices at which to inject a "
+                         "node failure (fault-tolerance demo/smoke test)")
     args = ap.parse_args(argv)
+    try:
+        fail_at = {int(s) for s in args.fail_at.split(",") if s.strip()}
+    except ValueError:
+        ap.error(f"--fail-at expects comma-separated step indices, "
+                 f"got {args.fail_at!r}")
+    bad = {s for s in fail_at if not 0 <= s < args.steps}
+    if bad:
+        ap.error(f"--fail-at steps {sorted(bad)} outside [0, {args.steps}): "
+                 "the injected failure would never fire")
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    if jax.process_count() > 1:
+        # per-host batch assembly (MarkovLMDataset host_id/num_hosts +
+        # make_array_from_process_local_data) and multi-writer checkpointing
+        # are not wired up yet; fail loudly rather than train on broken
+        # multi-process state
+        raise SystemExit("multi-process launch is not supported yet: run "
+                         "one process with all local devices")
     mesh = make_mesh_shape((args.data, args.model), ("data", "model"))
     rt = Runtime(compute_dtype=jnp.float32 if args.model * args.data == 1
                  else jnp.bfloat16,
@@ -71,19 +90,36 @@ def main(argv=None):
         p_shard = sh.to_shardings(mesh, p_spec)
         o_shard = sh.to_shardings(
             mesh, sh.opt_state_specs(mesh, None, p_spec))
-        step_fn = jax.jit(step_raw, in_shardings=(p_shard, o_shard, None),
+        batch_sds = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), ds.batch_at(0))
+        b_shard = sh.to_shardings(mesh, sh.batch_specs(mesh, batch_sds))
+        # out_shardings must pin params/opt to the same layout as the inputs:
+        # the step's outputs are fed straight back in (donated), and GSPMD
+        # would otherwise pick its own output layout and reject the next call
+        step_fn = jax.jit(step_raw, in_shardings=(p_shard, o_shard, b_shard),
+                          out_shardings=(p_shard, o_shard, None),
                           donate_argnums=(0, 1))
 
         t_start = time.time()
-        last = {"t": t_start, "step": 0}
+        last = {"t": t_start, "step": 0, "seen": 0}
 
         def batches(step):
             b = ds.batch_at(step)
             return {k: jnp.asarray(v) for k, v in b.items()}
 
         def step_logged(params, opt_state, batch):
+            t_before = time.time()
             params, opt_state, m = step_fn(params, opt_state, batch)
             s = int(opt_state["step"])
+            if last["seen"] == 0:       # first step this process — may be a
+                # cross-process resume at step N; window starts at this
+                # step, not at process start (restore time is not tok/s)
+                last["t"], last["step"] = t_before, s - 1
+            elif s <= last["seen"]:     # supervisor rolled back and re-ran
+                # window restarts after this step: its tokens aren't counted
+                # (last["step"] = s), so its time mustn't be either
+                last["t"], last["step"] = time.time(), s
+            last["seen"] = s
             if s % args.log_every == 0:
                 dt = time.time() - last["t"]
                 tps = (s - last["step"]) * args.batch * args.seq / max(dt, 1e-9)
@@ -94,11 +130,24 @@ def main(argv=None):
                 last["t"], last["step"] = time.time(), s
             return params, opt_state, m
 
+        def injector(step):
+            if step in fail_at:
+                fail_at.discard(step)
+                print(f"  [fault] injected failure before step {step}; "
+                      "rolling back to latest checkpoint (fresh init if "
+                      "none)", flush=True)
+                return True
+            return False
+
         sup = TrainSupervisor(ckpt_dir=args.ckpt_dir,
-                              ckpt_every=args.ckpt_every)
-        out = sup.run(init_fn, step_logged, batches, total_steps=args.steps)
-    print(f"[train] done in {time.time()-t_start:.0f}s; "
-          f"final loss {out['metrics'][-1]['loss']:.4f}; "
+                              ckpt_every=args.ckpt_every,
+                              run_tag=cfg.name,
+                              shardings=(p_shard, o_shard))
+        out = sup.run(init_fn, step_logged, batches, total_steps=args.steps,
+                      failure_injector=injector if fail_at else None)
+    final = (f"final loss {out['metrics'][-1]['loss']:.4f}" if out["metrics"]
+             else "already complete (resumed at final checkpoint)")
+    print(f"[train] done in {time.time()-t_start:.0f}s; {final}; "
           f"restarts {out['restarts']}; slow steps {out['slow_steps']}")
     return out
 

@@ -1,0 +1,44 @@
+"""Every module under src/repro must import.
+
+Regression guard for the bug class where tests or launchers reference a
+package that was never committed (repro.dist originally shipped that way):
+a missing module now fails here instead of crashing collection elsewhere
+or lying dormant until launch time.
+"""
+import importlib
+import pathlib
+
+import jax
+import pytest
+
+import repro
+
+# Initialize the jax backend *before* importing repro.launch.dryrun: that
+# module sets XLA_FLAGS=--xla_force_host_platform_device_count=512 at import
+# for standalone use, which must not re-shape this test process's devices.
+jax.devices()
+
+_ROOT = pathlib.Path(list(repro.__path__)[0])
+
+
+def _all_modules():
+    mods = []
+    for py in sorted(_ROOT.rglob("*.py")):
+        rel = py.relative_to(_ROOT.parent)
+        parts = list(rel.with_suffix("").parts)
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        mods.append(".".join(parts))
+    return mods
+
+
+MODULES = _all_modules()
+
+
+def test_module_list_nonempty():
+    assert len(MODULES) > 50, MODULES  # the repo has ~90 modules
+
+
+@pytest.mark.parametrize("mod", MODULES)
+def test_module_imports(mod):
+    importlib.import_module(mod)

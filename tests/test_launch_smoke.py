@@ -1,0 +1,24 @@
+"""CPU smoke test for the production training launch path.
+
+Drives `repro.launch.train` exactly as the CLI would (reduced config,
+8 steps, 1-device mesh) with a node failure injected mid-run: the
+supervisor must roll back to the last checkpoint, re-run, and finish with
+a contiguous metric log and a final checkpoint at `total_steps`.
+"""
+import numpy as np
+
+from repro.launch import train as launch_train
+from repro.train import checkpoint as ckpt
+
+
+def test_train_launch_resumes_after_injected_failure(tmp_path):
+    out = launch_train.main([
+        "--arch", "smollm-135m", "--reduced", "--steps", "8",
+        "--batch", "2", "--seq", "32", "--ckpt-dir", str(tmp_path),
+        "--ckpt-every", "3", "--fail-at", "5", "--log-every", "100",
+    ])
+    assert out["restarts"] == 1
+    steps = [m["step"] for m in out["metrics"]]
+    assert steps == list(range(8)), "metric log must be contiguous"
+    assert np.isfinite([m["loss"] for m in out["metrics"]]).all()
+    assert ckpt.list_checkpoints(str(tmp_path))[-1] == 8

@@ -1,9 +1,15 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+`hypothesis` is a dev-only dependency (pip install -e .[dev]); when it is
+absent the whole module skips at collection instead of crashing tier-1."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core.ehvi import ehvi_2d
 from repro.core.pareto import hypervolume_2d, pareto_front
