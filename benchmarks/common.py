@@ -29,14 +29,14 @@ def load_artifact(name: str):
 
 
 def sample_valid_designs(n: int, seed: int = 0, **decode_kw) -> List:
-    from repro.core.design_space import decode, sample
+    from repro.core.design_space import decode_batch, sample
     from repro.core.validator import validate
 
     rng = np.random.default_rng(seed)
     out = []
     while len(out) < n:
-        for u in sample(rng, n):
-            r = validate(decode(u, **decode_kw))
+        for d in decode_batch(sample(rng, n), **decode_kw):
+            r = validate(d)
             if r.ok:
                 out.append(r.design)
             if len(out) >= n:

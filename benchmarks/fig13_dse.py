@@ -2,17 +2,25 @@
 design-space scatter (stacked vs off-chip DRAM Pareto fronts) and the
 headline comparison of searched Pareto-optimal WSCs vs the H100-like GPU
 cluster and WSE2-like / Dojo-like WSC baselines at matched total area.
+
+The scatter sweep runs through `evaluate_objectives_batch` (one vectorized
+pass over all sampled designs) and the MFMOBO refinement proposes q-point
+batches; candidates/sec is reported for the perf trajectory.
 """
 from __future__ import annotations
 
-import functools
+import time
 from typing import Dict
 
 import numpy as np
 
 from benchmarks.common import sample_valid_designs, save_artifact
 from repro.core.baselines import DOJO_LIKE, WSE2_LIKE, gpu_cluster_eval
-from repro.core.evaluator import evaluate_design, evaluate_objectives
+from repro.core.evaluator import (
+    batched_objectives,
+    evaluate_design,
+    evaluate_objectives_batch,
+)
 from repro.core.mfmobo import run_mfmobo
 from repro.core.pareto import pareto_front, to_max_space
 from repro.core.validator import validate
@@ -21,26 +29,29 @@ from repro.core.workload import GPT_BENCHMARKS, inference_workload
 
 def run(quick: bool = False) -> Dict:
     wl = GPT_BENCHMARKS[1] if quick else GPT_BENCHMARKS[7]
-    f1 = functools.partial(evaluate_objectives, wl=wl, fidelity="analytical")
+    f1 = batched_objectives(wl, "analytical")
 
     # explore (analytical fidelity for this scatter; fig8 shows MF behavior)
     n = 24 if quick else 80
+    t0 = time.time()
     designs = sample_valid_designs(n, seed=13)
     pts = []
-    for d in designs:
-        t, p = f1(d)
+    for d, (t, p) in zip(designs, evaluate_objectives_batch(designs, wl)):
         if t > 0:
             pts.append({"throughput": t, "power_w": p,
                         "stacked": d.use_stacked_dram,
                         "design": d.describe()})
-    # a short MFMOBO refinement to densify the front
+    # a short MFMOBO refinement to densify the front (q-point proposals)
     tr = run_mfmobo(f1, f1, d0=2, d1=3, k=2, N0=6 if quick else 12,
-                    N1=8 if quick else 16, n_candidates=64, seed=3)
+                    N1=8 if quick else 16, n_candidates=64, seed=3,
+                    q=2 if quick else 4)
     for d, y in zip(tr.designs, tr.ys):
         if y[0] > 0:
             pts.append({"throughput": y[0], "power_w": y[1],
                         "stacked": d.use_stacked_dram,
                         "design": d.describe()})
+    wall_s = time.time() - t0
+    n_evals = n + tr.n_evals
 
     def front_of(sub):
         if not sub:
@@ -79,6 +90,9 @@ def run(quick: bool = False) -> Dict:
     out = {
         "workload": wl.name,
         "n_points": len(pts),
+        "n_evaluations": n_evals,
+        "wall_s": wall_s,
+        "candidates_per_sec": n_evals / max(wall_s, 1e-9),
         "pareto_stacked": stacked,
         "pareto_offchip": offchip,
         "baselines": base,
@@ -90,7 +104,8 @@ def run(quick: bool = False) -> Dict:
     save_artifact("fig13_dse", out)
     print(f"\n=== Fig.13: DSE for {wl.name} training ===")
     print(f"sampled {len(pts)} feasible designs; Pareto: "
-          f"{len(stacked)} stacked-DRAM, {len(offchip)} off-chip")
+          f"{len(stacked)} stacked-DRAM, {len(offchip)} off-chip "
+          f"({out['candidates_per_sec']:.2f} candidates/sec)")
     for name, ref in base.items():
         g = out["gains"][name]
         print(f"  vs {name:10s}: thpt {ref['throughput']:12.0f} tok/s, "

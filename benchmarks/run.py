@@ -2,10 +2,17 @@
 table from the dry-run artifacts.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7,...]
+
+Every invocation also measures the batched-vs-serial evaluator speedup and
+writes `BENCH_dse.json` at the repo root (per-benchmark wall time, explorer
+candidates/sec, key result metrics) so the perf trajectory is tracked
+across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -24,6 +31,63 @@ _MODULES = {
     "roofline": "benchmarks.roofline_table",
 }
 
+# result keys worth tracking across PRs (when a benchmark reports them)
+_TRACKED_KEYS = ("candidates_per_sec", "n_evaluations", "wall_s", "q",
+                 "convergence_speedup_vs_mobo", "hv_improvement_at_equal_iters",
+                 "n_points", "workload", "eval_cache")
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_dse.json")
+
+
+def measure_batch_speedup(n_designs: int = 64, max_strategies: int = 24):
+    """Acceptance probe: evaluate_design_batch on n_designs candidates vs
+    the same designs through serial evaluate_design calls (cold caches for
+    both), analytical fidelity on the quick GPT-1.7B workload."""
+    from benchmarks.common import sample_valid_designs
+    from repro.core.evaluator import (clear_eval_cache, evaluate_design,
+                                      evaluate_design_batch)
+    from repro.core.workload import GPT_BENCHMARKS
+
+    wl = GPT_BENCHMARKS[0]
+    designs = sample_valid_designs(n_designs, seed=1234)
+    clear_eval_cache()
+    t0 = time.perf_counter()
+    serial = [evaluate_design(d, wl, max_strategies=max_strategies)
+              for d in designs]
+    serial_s = time.perf_counter() - t0
+    clear_eval_cache()
+    t0 = time.perf_counter()
+    batch = evaluate_design_batch(designs, wl, max_strategies=max_strategies)
+    batch_s = time.perf_counter() - t0
+    agree = all(
+        a.feasible == b.feasible
+        and (not a.feasible
+             or abs(a.throughput - b.throughput) <= 1e-6 * abs(a.throughput))
+        for a, b in zip(serial, batch))
+    return {
+        "n_designs": n_designs,
+        "workload": wl.name,
+        "serial_s": serial_s,
+        "batch_s": batch_s,
+        "speedup": serial_s / max(batch_s, 1e-9),
+        "candidates_per_sec_batch": n_designs / max(batch_s, 1e-9),
+        "candidates_per_sec_serial": n_designs / max(serial_s, 1e-9),
+        "scalar_batch_agree": agree,
+    }
+
+
+def write_bench_json(records, quick: bool, speedup):
+    data = {
+        "generated_unix_s": time.time(),
+        "quick": quick,
+        "batch_eval": speedup,
+        "benchmarks": records,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(data, f, indent=1, default=float)
+    return BENCH_JSON
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -35,6 +99,7 @@ def main():
     names = args.only.split(",") if args.only else list(BENCHES)
 
     failures = []
+    records = {}
     for name in names:
         mod_name = _MODULES[name.strip()]
         print(f"\n{'='*70}\nRunning {mod_name} (quick={args.quick})\n{'='*70}",
@@ -43,11 +108,38 @@ def main():
         try:
             import importlib
             mod = importlib.import_module(mod_name)
-            mod.run(quick=args.quick)
-            print(f"[{name}] done in {time.time()-t0:.0f}s", flush=True)
+            result = mod.run(quick=args.quick)
+            wall = time.time() - t0
+            rec = {"wall_s": wall, "status": "ok"}
+            if isinstance(result, dict):
+                rec["metrics"] = {k: result[k] for k in _TRACKED_KEYS
+                                  if k in result}
+            records[name] = rec
+            print(f"[{name}] done in {wall:.0f}s", flush=True)
         except Exception:
             traceback.print_exc()
+            records[name] = {"wall_s": time.time() - t0, "status": "failed"}
             failures.append(name)
+
+    print(f"\n{'='*70}\nMeasuring batched-evaluator speedup\n{'='*70}",
+          flush=True)
+    try:
+        speedup = measure_batch_speedup()
+        print(f"batch eval: {speedup['n_designs']} designs in "
+              f"{speedup['batch_s']:.3f}s vs {speedup['serial_s']:.1f}s serial "
+              f"-> {speedup['speedup']:.0f}x "
+              f"({speedup['candidates_per_sec_batch']:.0f} candidates/sec)")
+        if not speedup["scalar_batch_agree"]:
+            print("batch eval DISAGREES with serial evaluation")
+            failures.append("batch_vs_serial_agreement")
+    except Exception:
+        traceback.print_exc()
+        speedup = {"status": "failed"}
+        failures.append("batch_speedup")
+
+    path = write_bench_json(records, args.quick, speedup)
+    print(f"wrote {path}")
+
     if failures:
         print("\nFAILED:", failures)
         sys.exit(1)

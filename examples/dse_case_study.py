@@ -5,10 +5,9 @@ against the H100-like / WSE2-like / Dojo-like baselines.
     PYTHONPATH=src python examples/dse_case_study.py [--quick]
 """
 import argparse
-import functools
 
 from repro.core.baselines import DOJO_LIKE, WSE2_LIKE, gpu_cluster_eval
-from repro.core.evaluator import evaluate_design, evaluate_objectives
+from repro.core.evaluator import batched_objectives, evaluate_design
 from repro.core.mfmobo import run_mfmobo
 from repro.core.validator import validate
 from repro.core.workload import GPT_BENCHMARKS
@@ -25,11 +24,11 @@ def main():
     print(f"workload: {wl.name} training, batch {wl.batch} x seq {wl.seq}, "
           f"GPU budget {wl.gpu_budget}")
 
-    f1 = functools.partial(evaluate_objectives, wl=wl, fidelity="analytical")
+    f1 = batched_objectives(wl, "analytical")
     tr = run_mfmobo(f1, f1, d0=2, d1=3, k=3,
                     N0=6 if args.quick else 14,
                     N1=8 if args.quick else 18,
-                    n_candidates=64, seed=0)
+                    n_candidates=64, q=2 if args.quick else 4, seed=0)
     front = tr.pareto()
     print(f"\nexplored {len(tr.ys)} high-fidelity designs; "
           f"hypervolume {tr.hv[0]:.2f} -> {tr.hv[-1]:.2f}")

@@ -2,16 +2,21 @@
 DP weight-update traffic, DRAM access, pipeline (micro-batch) efficiency —
 combined with the op-level chunk latency into step time, throughput and
 power (action-energy accounting, §VI-E).
+
+The core math lives in `evaluate_step_batch`, which broadcasts every term
+over a leading candidate axis given a `DesignBatch` (DESIGN.md §4); the
+scalar `evaluate_step` delegates to it with a length-1 batch.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, Optional
+
+import numpy as np
 
 from repro.core import components as C
 from repro.core.compiler import ChunkGraph, Strategy
-from repro.core.design_space import WSCDesign
+from repro.core.design_space import DesignBatch, WSCDesign
 from repro.core.workload import BYTES, LLMWorkload
 
 
@@ -27,139 +32,187 @@ class StepResult:
     reason: str = ""
 
 
-def _tp_allreduce_s(design: WSCDesign, wl: LLMWorkload, s: Strategy,
-                    mb_tokens: int, cores_per_chunk: int) -> float:
-    """2 all-reduces per layer over the TP group (Megatron)."""
-    if s.tp <= 1:
-        return 0.0
-    act_bytes = mb_tokens * wl.d_model * BYTES
-    vol = 2.0 * (s.tp - 1) / s.tp * act_bytes * 2.0      # 2 collectives/layer
-    cores_per_reticle = design.cores_per_reticle()
-    if cores_per_chunk <= cores_per_reticle:
-        bw = design.reticle_bisection_Bps()
-    else:
-        bw = design.inter_reticle_bw_Bps()
-    return vol / max(bw, 1.0)
+def evaluate_step_batch(geom: DesignBatch, wl: LLMWorkload,
+                        tp: np.ndarray, pp: np.ndarray, dp: np.ndarray,
+                        mb: np.ndarray, chunk_latency_cycles: np.ndarray,
+                        sram_bits_layer: np.ndarray,
+                        noc_bytes_layer: np.ndarray, n_wafers: np.ndarray,
+                        peak_power_w: Optional[float] = None
+                        ) -> Dict[str, np.ndarray]:
+    """Batched chunk-level model over C candidates.
 
+    geom holds the per-candidate design geometry (already gathered to the
+    candidate axis); tp/pp/dp/mb are the strategy knobs; chunk_latency_cycles,
+    sram_bits_layer (SRAM bits moved per layer across the chunk grid) and
+    noc_bytes_layer (NoC byte-hops per layer) come from the tile/NoC stage.
+    Returns a dict of (C,) arrays: step_time_s, throughput, power_w,
+    pipeline_eff, energy_j, feasible, plus the per-component breakdown terms
+    (compute_s/tp_s/pp_s/dram_s/dp_s are per-microbatch stage seconds).
+    """
+    tp = np.asarray(tp, np.int64)
+    pp = np.asarray(pp, np.int64)
+    dp = np.asarray(dp, np.int64)
+    mb = np.asarray(mb, np.int64)
+    nw = np.asarray(n_wafers, np.int64)
+    lat = np.asarray(chunk_latency_cycles, np.float64)
 
-def _pp_transfer_s(design: WSCDesign, wl: LLMWorkload, s: Strategy,
-                   mb_tokens: int) -> float:
-    if s.pp <= 1:
-        return 0.0
-    act_bytes = mb_tokens * wl.d_model * BYTES
-    return act_bytes / max(design.inter_reticle_bw_Bps(), 1.0)
+    train = wl.phase == "train"
+    bwd_mult = 3.0 if train else 1.0
+    mb_count = mb if train else np.ones_like(mb)
+    mb_tokens = np.maximum(wl.tokens_per_step() // (dp * mb_count), 1)
+    layers_per_stage = np.maximum(wl.n_layers // pp, 1)
+    chunks = pp * dp
+    act_bytes = (mb_tokens * wl.d_model).astype(np.float64) * BYTES
+    p_bytes = wl.params_bytes()
 
+    # --- per-microbatch stage time -----------------------------------------
+    compute_s = lat * layers_per_stage / C.CLOCK_HZ * bwd_mult
 
-def _dp_allreduce_s(design: WSCDesign, wl: LLMWorkload, s: Strategy,
-                    n_wafers: int) -> float:
-    if s.dp <= 1 or wl.phase != "train":
-        return 0.0
-    grad_bytes = wl.params_bytes() / max(s.pp, 1)
-    vol = 2.0 * (s.dp - 1) / s.dp * grad_bytes
-    wafers_per_replica = max(n_wafers / s.dp, 1e-9)
-    if wafers_per_replica >= 1.0:
-        # replicas on separate wafers: bottleneck is inter-wafer NIs
-        n_ni = 2 * (design.reticle_array[0] + design.reticle_array[1])
-        bw = n_ni * C.INTER_WAFER_BW_PER_NI
-    else:
-        bw = design.inter_reticle_bw_Bps() * min(design.reticle_array)
-    return vol / max(bw, 1.0)
+    # TP all-reduce: 2 collectives per layer over the TP group (Megatron)
+    cores_per_chunk = geom.total_cores * nw // np.maximum(chunks, 1)
+    tp_vol = 2.0 * (tp - 1) / tp * act_bytes * 2.0
+    tp_bw = np.where(cores_per_chunk <= geom.cores_per_reticle,
+                     geom.reticle_bisection_Bps, geom.inter_reticle_bw_Bps)
+    tp_s = np.where(tp <= 1, 0.0, tp_vol / np.maximum(tp_bw, 1.0)) \
+        * layers_per_stage * bwd_mult
 
+    pp_s = np.where(
+        pp <= 1, 0.0,
+        act_bytes / np.maximum(geom.inter_reticle_bw_Bps, 1.0)) * bwd_mult
 
-def _dram_access_s(design: WSCDesign, wl: LLMWorkload, s: Strategy,
-                   mb_tokens: int, n_wafers: int) -> float:
-    """Weight/KV streaming beyond SRAM capacity (per microbatch, per chunk)."""
-    sram_per_chunk = (design.buffer_kb * 1024.0
-                      * design.total_cores() * n_wafers / max(s.chunks() * 1, 1))
-    w_bytes = wl.params_bytes() / max(s.pp * s.dp, 1) / max(s.tp, 1) * s.tp
-    w_bytes = wl.params_bytes() / max(s.pp, 1)           # per pipeline stage
-    kv_bytes = (wl.kv_bytes_per_layer() * wl.n_layers / max(s.pp, 1)
+    # DRAM: weight/KV streaming beyond SRAM capacity (per microbatch, chunk)
+    sram_per_chunk = (geom.buffer_kb * 1024.0 * geom.total_cores * nw
+                      / np.maximum(chunks, 1))
+    w_bytes = p_bytes / np.maximum(pp, 1)
+    kv_bytes = (wl.kv_bytes_per_layer() * wl.n_layers / np.maximum(pp, 1)
                 if wl.phase == "decode" else 0.0)
-    spill = max(w_bytes + kv_bytes - sram_per_chunk, 0.0)
-    if spill <= 0:
-        return 0.0
-    reticles_per_chunk = max(
-        design.n_reticles() * n_wafers / max(s.chunks(), 1), 1e-9)
-    if design.use_stacked_dram:
-        bw = design.dram_bw_Bps_per_reticle() * reticles_per_chunk
-        return spill / max(bw, 1.0)
-    # off-chip: edge memory controllers + transit over inter-reticle mesh
-    n_ctrl = 2 * (design.reticle_array[0] + design.reticle_array[1])
-    bw = n_ctrl * C.OFFCHIP_BW_PER_CTRL / max(s.chunks(), 1)
-    transit = design.inter_reticle_bw_Bps() * min(design.reticle_array) \
-        / max(s.chunks(), 1)
-    return spill / max(min(bw, transit), 1.0)
+    spill = np.maximum(w_bytes + kv_bytes - sram_per_chunk, 0.0)
+    reticles_per_chunk = np.maximum(
+        geom.n_reticles * nw / np.maximum(chunks, 1), 1e-9)
+    stacked_bw = geom.dram_bw_Bps_per_reticle * reticles_per_chunk
+    n_edge = 2 * (geom.ret_h + geom.ret_w)
+    offchip_bw = n_edge * C.OFFCHIP_BW_PER_CTRL / np.maximum(chunks, 1)
+    transit = geom.inter_reticle_bw_Bps * np.minimum(geom.ret_h, geom.ret_w) \
+        / np.maximum(chunks, 1)
+    dram_bw = np.where(geom.dram_on, stacked_bw,
+                       np.minimum(offchip_bw, transit))
+    dram_s = np.where(spill <= 0, 0.0, spill / np.maximum(dram_bw, 1.0))
+
+    stage_s = compute_s + tp_s + pp_s + dram_s
+
+    # --- pipeline + step ----------------------------------------------------
+    eff = mb_count / (mb_count + pp - 1.0)
+    iter_s = stage_s * mb_count / eff
+    # DP gradient all-reduce (training only)
+    grad_vol = 2.0 * (dp - 1) / dp * w_bytes
+    wafers_per_replica = np.maximum(nw / dp, 1e-9)
+    dp_bw = np.where(wafers_per_replica >= 1.0,
+                     n_edge * C.INTER_WAFER_BW_PER_NI,
+                     geom.inter_reticle_bw_Bps
+                     * np.minimum(geom.ret_h, geom.ret_w))
+    dp_s = np.where((dp <= 1) | (not train), 0.0,
+                    grad_vol / np.maximum(dp_bw, 1.0))
+    step_s = iter_s + dp_s
+    tokens = wl.tokens_per_step()
+    throughput = tokens / np.maximum(step_s, 1e-12)
+
+    # --- energy (action accounting, §VI-E) ----------------------------------
+    E = C.ENERGY
+    e_mac = wl.flops_per_step() / 2.0 * E.mac * 1e-12
+    e_sram = (np.asarray(sram_bits_layer, np.float64) * wl.n_layers
+              * mb_count * dp * bwd_mult * E.sram_read_bit * 1e-12)
+    e_noc = (np.asarray(noc_bytes_layer, np.float64) * 8 * wl.n_layers
+             * mb_count * dp * bwd_mult * E.noc_bit_hop * 1e-12)
+    ir_bytes = (2.0 * (tp - 1) / np.maximum(tp, 1) * mb_tokens * wl.d_model
+                * BYTES * 2 * wl.n_layers * mb_count * dp * bwd_mult)
+    ir_bytes = ir_bytes + p_bytes * 2 * (dp > 1)
+    e_ir = ir_bytes * 8 * geom.ir_energy_pj_per_bit * 1e-12
+    # NOTE: inherited model asymmetry — this capacity term sizes the SRAM
+    # pool per wafer (no nw factor) while the spill/latency term above
+    # includes nw; kept bit-identical to the pre-batching evaluator
+    dram_bytes = np.maximum(
+        p_bytes / np.maximum(pp, 1)
+        - geom.buffer_kb * 1024.0 * geom.total_cores / np.maximum(chunks, 1),
+        0.0) * mb_count * dp
+    e_dram = dram_bytes * 8 * np.where(geom.dram_on, E.dram_bit,
+                                       E.offchip_bit) * 1e-12
+    static_w = geom.static_power_w * nw
+    energy = e_mac + e_sram + e_noc + e_ir + e_dram + static_w * step_s
+
+    bad = ~(np.isfinite(step_s) & np.isfinite(energy))
+    power = np.where(bad, np.inf, energy / np.maximum(step_s, 1e-12))
+    limit = (peak_power_w if peak_power_w is not None
+             else C.WAFER_POWER_W * nw)
+    feasible = ~bad & (power <= limit) & np.isfinite(power)
+    return {
+        "step_time_s": np.where(bad, np.inf, step_s),
+        "throughput": np.where(bad, 0.0, throughput),
+        "power_w": power,
+        "pipeline_eff": eff,
+        "energy_j": np.where(bad, 0.0, energy),
+        "feasible": feasible,
+        "non_finite": bad,
+        # per-microbatch stage components (for the winner's breakdown)
+        "compute_s": compute_s, "tp_s": tp_s, "pp_s": pp_s,
+        "dram_s": dram_s, "dp_s": dp_s,
+        "mb_count": mb_count,
+    }
+
+
+def step_result_at(out: Dict[str, np.ndarray], i: int) -> StepResult:
+    """Materialize candidate i of an `evaluate_step_batch` result as the
+    scalar StepResult (with its seconds-per-component breakdown)."""
+    if bool(out["non_finite"][i]):
+        return StepResult(float("inf"), 0.0, float("inf"),
+                          float(out["pipeline_eff"][i]), {}, 0.0,
+                          feasible=False, reason="non_finite")
+    eff = float(out["pipeline_eff"][i])
+    mbc = float(out["mb_count"][i])
+    feasible = bool(out["feasible"][i])
+    return StepResult(
+        step_time_s=float(out["step_time_s"][i]),
+        throughput=float(out["throughput"][i]),
+        power_w=float(out["power_w"][i]),
+        pipeline_eff=eff,
+        breakdown={"compute": float(out["compute_s"][i]) * mbc / eff,
+                   "tp": float(out["tp_s"][i]) * mbc / eff,
+                   "pp": float(out["pp_s"][i]) * mbc / eff,
+                   "dram": float(out["dram_s"][i]) * mbc / eff,
+                   "dp": float(out["dp_s"][i])},
+        energy_j=float(out["energy_j"][i]),
+        feasible=feasible,
+        reason="" if feasible else "power",
+    )
+
+
+# batch-of-one geometry views, memoized per (hashable) design so the scalar
+# path doesn't recompute the derived geometry once per strategy
+_GEOM_CACHE: Dict[WSCDesign, DesignBatch] = {}
+
+
+def _geom_for(design: WSCDesign) -> DesignBatch:
+    g = _GEOM_CACHE.get(design)
+    if g is None:
+        if len(_GEOM_CACHE) >= 4096:
+            _GEOM_CACHE.pop(next(iter(_GEOM_CACHE)))
+        g = DesignBatch.from_designs([design])
+        _GEOM_CACHE[design] = g
+    return g
 
 
 def evaluate_step(design: WSCDesign, wl: LLMWorkload, s: Strategy,
                   chunk_latency_cycles: float, graph: ChunkGraph,
                   n_wafers: int, peak_power_w: Optional[float] = None
                   ) -> StepResult:
-    """Combine op-level chunk latency with chunk-level comm/DRAM/pipeline."""
-    mb_count = s.microbatches if wl.phase == "train" else 1
-    mb_tokens = max(wl.tokens_per_step() // (s.dp * mb_count), 1)
-    layers_per_stage = max(wl.n_layers // s.pp, 1)
-
-    # --- per-microbatch stage time -----------------------------------------
-    compute_s = (chunk_latency_cycles * layers_per_stage / C.CLOCK_HZ)
-    bwd_mult = 3.0 if wl.phase == "train" else 1.0       # fwd+bwd
-    compute_s *= bwd_mult
-    tp_s = _tp_allreduce_s(design, wl, s, mb_tokens,
-                           design.total_cores() * n_wafers // max(s.chunks(), 1)
-                           ) * layers_per_stage * bwd_mult
-    pp_s = _pp_transfer_s(design, wl, s, mb_tokens) * bwd_mult
-    dram_s = _dram_access_s(design, wl, s, mb_tokens, n_wafers)
-    stage_s = compute_s + tp_s + pp_s + dram_s
-
-    # --- pipeline + step ----------------------------------------------------
-    eff = mb_count / (mb_count + s.pp - 1.0)
-    iter_s = stage_s * mb_count / eff
-    dp_s = _dp_allreduce_s(design, wl, s, n_wafers)
-    step_s = iter_s + dp_s
-    tokens = wl.tokens_per_step()
-    throughput = tokens / max(step_s, 1e-12)
-
-    # --- energy (action accounting, §VI-E) ----------------------------------
-    E = C.ENERGY
-    flops = wl.flops_per_step()
-    e_mac = flops / 2.0 * E.mac * 1e-12
+    """Combine op-level chunk latency with chunk-level comm/DRAM/pipeline.
+    Scalar wrapper over `evaluate_step_batch` (batch of one)."""
+    geom = _geom_for(design)
     sram_bits_layer = sum(o.tile.sram_read_bits + o.tile.sram_write_bits
                           for o in graph.ops) * graph.n_cores
-    e_sram = (sram_bits_layer * wl.n_layers * mb_count * s.dp
-              * bwd_mult * E.sram_read_bit * 1e-12)
     noc_bytes_layer = float(graph.link_loads.sum())
-    e_noc = (noc_bytes_layer * 8 * wl.n_layers * mb_count * s.dp * bwd_mult
-             * E.noc_bit_hop * 1e-12)
-    ir_bytes = (2.0 * (s.tp - 1) / max(s.tp, 1) * mb_tokens * wl.d_model
-                * BYTES * 2 * wl.n_layers * mb_count * s.dp * bwd_mult)
-    ir_bytes += wl.params_bytes() * 2 * (1 if s.dp > 1 else 0)
-    e_ir = ir_bytes * 8 * E.ir_bit(design.integration) * 1e-12
-    dram_bytes = max(wl.params_bytes() / max(s.pp, 1)
-                     - design.buffer_kb * 1024.0 * design.total_cores()
-                     / max(s.chunks(), 1), 0.0) * mb_count * s.dp
-    e_dram = dram_bytes * 8 * (E.dram_bit if design.use_stacked_dram
-                               else E.offchip_bit) * 1e-12
-    static_w = design.static_power_w() * n_wafers
-    energy = e_mac + e_sram + e_noc + e_ir + e_dram + static_w * step_s
-    if not (math.isfinite(step_s) and math.isfinite(energy)):
-        return StepResult(float("inf"), 0.0, float("inf"), eff, {}, 0.0,
-                          feasible=False, reason="non_finite")
-    power = energy / max(step_s, 1e-12)
-
-    limit = (peak_power_w if peak_power_w is not None
-             else C.WAFER_POWER_W * n_wafers)
-    feasible = power <= limit and math.isfinite(power)
-    return StepResult(
-        step_time_s=step_s,
-        throughput=throughput,
-        power_w=power,
-        pipeline_eff=eff,
-        breakdown={"compute": compute_s * mb_count / eff,
-                   "tp": tp_s * mb_count / eff,
-                   "pp": pp_s * mb_count / eff,
-                   "dram": dram_s * mb_count / eff,
-                   "dp": dp_s},
-        energy_j=energy,
-        feasible=feasible,
-        reason="" if feasible else "power",
-    )
+    out = evaluate_step_batch(
+        geom, wl, np.asarray([s.tp]), np.asarray([s.pp]), np.asarray([s.dp]),
+        np.asarray([s.microbatches]), np.asarray([chunk_latency_cycles]),
+        np.asarray([sram_bits_layer]), np.asarray([noc_bytes_layer]),
+        np.asarray([n_wafers]), peak_power_w)
+    return step_result_at(out, 0)

@@ -17,11 +17,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.design_space import WSCDesign
+from repro.core.design_space import WSCDesign, floor_log2
 from repro.core.tile_eval import TileResult, evaluate_tile
 from repro.core.workload import BYTES, GEMMOp, LLMWorkload
 
@@ -52,12 +52,17 @@ class ChunkGraph:
     link_flows: np.ndarray                 # (n_links,) flow count per link
     link_index: Dict[Tuple[int, int], int] # (core_u, core_v) -> link id
     n_cores: int
-    routes: Dict[Tuple[int, int], List[Tuple[int, int]]] = None  # pair->hops
+    routes: Optional[Dict[Tuple[int, int], List[Tuple[int, int]]]] = \
+        dataclasses.field(default=None)                          # pair->hops
 
     def injection_rates(self, noc_bw_bits: int) -> np.ndarray:
-        """flits/cycle injected per core, averaged over the chunk runtime."""
-        total_cycles = max(sum(o.tile.cycles for o in self.ops), 1.0)
+        """flits/cycle injected per core, averaged over the chunk runtime.
+        A chunk whose ops report zero compute cycles has no defined runtime
+        to average over — injection is zero, not divided by a fake cycle."""
         inj = np.zeros(self.n_cores)
+        total_cycles = sum(o.tile.cycles for o in self.ops)
+        if total_cycles <= 0.0:
+            return inj
         flit_bytes = noc_bw_bits / 8.0
         for t in self.transfers:
             for s, _, b in t.pairs:
@@ -68,6 +73,13 @@ class ChunkGraph:
 def _grid_for(n_cores: int) -> Tuple[int, int]:
     gh = 2 ** (int(math.log2(max(n_cores, 1))) // 2)
     return gh, max(n_cores // gh, 1)
+
+
+def grid_for_batch(n_cores: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized `_grid_for` over an int array."""
+    n = np.maximum(np.asarray(n_cores, np.int64), 1)
+    gh = np.int64(1) << (floor_log2(n) // 2)
+    return gh, np.maximum(n // gh, 1)
 
 
 def _xy_route(src: int, dst: int, W: int) -> List[Tuple[int, int]]:
@@ -207,3 +219,73 @@ def enumerate_strategies(design: WSCDesign, wl: LLMWorkload,
                         continue
                     out.append(Strategy(tp, pp, dp, mb))
     return out or [Strategy(1, 1, 1, 1)]
+
+
+def strategy_sort_key(s: Strategy) -> Tuple:
+    """Search-order heuristic: prefer modest TP, deep pipelines last."""
+    return (abs(math.log2(max(s.tp, 1)) - 5), s.pp, -s.microbatches)
+
+
+# --------------------------------------------------------------------------
+# batched strategy enumeration (DESIGN.md §4) — the design-independent part
+# of `enumerate_strategies` precomputed once per workload as a combo grid,
+# so per-design feasibility is a couple of vectorized comparisons.
+# --------------------------------------------------------------------------
+
+_STRATEGY_GRID_CACHE: Dict[Tuple, Dict[str, np.ndarray]] = {}
+
+
+def _strategy_grid(wl) -> Dict[str, np.ndarray]:
+    key = (wl.n_layers, wl.batch, wl.phase, wl.params_bytes(),
+           wl.kv_bytes_per_layer())
+    hit = _STRATEGY_GRID_CACHE.get(key)
+    if hit is not None:
+        return hit
+    p_bytes = wl.params_bytes()
+    opt_mult = 6.0 if wl.phase == "train" else 1.0
+    pows = [2 ** i for i in range(0, 17)]
+    tps, pps, dps, mbs, needs = [], [], [], [], []
+    for pp in [p for p in pows if p <= min(wl.n_layers, 64)]:
+        for dp in [d for d in pows if d <= max(wl.batch, 1)]:
+            for tp in [t for t in pows if t <= 4096]:
+                if wl.phase == "train":
+                    need = dp * p_bytes * opt_mult / max(pp, 1)
+                else:
+                    need = (dp * p_bytes / max(pp, 1)
+                            + wl.kv_bytes_per_layer() * wl.n_layers)
+                for mb in (1, 2, 4, 8, 16, 32):
+                    if wl.phase != "train" and mb > 1:
+                        continue
+                    if wl.batch % (dp * (mb if wl.phase == "train" else 1)):
+                        continue
+                    tps.append(tp); pps.append(pp); dps.append(dp)
+                    mbs.append(mb); needs.append(need)
+    tp = np.array(tps, np.int64)
+    pp = np.array(pps, np.int64)
+    dp = np.array(dps, np.int64)
+    mb = np.array(mbs, np.int64)
+    need = np.array(needs, np.float64)
+    # stable sort by strategy_sort_key; lexsort primary = last key
+    order = np.lexsort((-mb, pp, np.abs(np.log2(np.maximum(tp, 1)) - 5.0)))
+    grid = {"tp": tp, "pp": pp, "dp": dp, "mb": mb, "need": need,
+            "chunks": pp * dp, "order": order}
+    if len(_STRATEGY_GRID_CACHE) > 64:
+        _STRATEGY_GRID_CACHE.pop(next(iter(_STRATEGY_GRID_CACHE)))
+    _STRATEGY_GRID_CACHE[key] = grid
+    return grid
+
+
+def feasible_strategy_arrays(wl, total_cores: int, mem_budget: float,
+                             max_strategies: int) -> np.ndarray:
+    """(k, 4) int64 array of [tp, pp, dp, microbatches], sorted by
+    `strategy_sort_key` and capped — element-wise identical to
+    sorted(enumerate_strategies(...), key=strategy_sort_key)[:cap], with the
+    same Strategy(1,1,1,1) fallback when nothing is feasible."""
+    g = _strategy_grid(wl)
+    mask = ((g["chunks"] * g["tp"] <= total_cores)
+            & (g["tp"] <= total_cores) & (g["need"] <= mem_budget))
+    idx = g["order"][mask[g["order"]]][:max_strategies]
+    if len(idx) == 0:
+        return np.array([[1, 1, 1, 1]], np.int64)
+    return np.stack([g["tp"][idx], g["pp"][idx], g["dp"][idx],
+                     g["mb"][idx]], axis=1)

@@ -10,7 +10,8 @@ area-power table (the paper itself frames it that way).
 from __future__ import annotations
 
 import dataclasses
-import math
+
+import numpy as np
 
 # ---------------------------------------------------------------------------
 # constants (14 nm, 1 GHz)
@@ -83,9 +84,14 @@ TSV_AREA_RATIO_MAX = 0.015       # stress constraint
 # ---------------------------------------------------------------------------
 
 
+# the numeric helpers below are dtype-polymorphic: scalars in -> (np) scalar
+# out, arrays in -> arrays out, so design_space.DesignBatch shares the exact
+# same formulas (and constants) as the scalar WSCDesign methods.
+
+
 def sram_area_mm2(buffer_kb: float, buffer_bw_bits: int) -> float:
     base = buffer_kb * SRAM_MM2_PER_KB
-    widen = max(0.0, math.log2(max(buffer_bw_bits, 256) / 256.0))
+    widen = np.maximum(0.0, np.log2(np.maximum(buffer_bw_bits, 256) / 256.0))
     return base * (1.0 + SRAM_BW_AREA_FACTOR * widen)
 
 
@@ -98,7 +104,7 @@ def core_area_mm2(mac_num: int, buffer_kb: float, buffer_bw: int,
     # operand-distribution networks grow super-linearly with array size
     # (broadcast wiring / accumulation trees) — the "module efficiency"
     # penalty of very large cores (paper §IX-A)
-    dist = (mac_num / 512.0) ** 0.10 if mac_num > 512 else 1.0
+    dist = np.where(np.asarray(mac_num) > 512, (mac_num / 512.0) ** 0.10, 1.0)
     a = (mac_num * MAC_AREA_MM2 * dist
          + sram_area_mm2(buffer_kb, buffer_bw)
          + router_area_mm2(noc_bw)
@@ -121,7 +127,7 @@ def dram_gb_at_bw(bw_tbps_per_100mm2: float) -> float:
     lo_bw, hi_bw = DRAM_BW_RANGE
     lo_gb, hi_gb = DRAM_GB_RANGE
     t = (bw_tbps_per_100mm2 - lo_bw) / (hi_bw - lo_bw)
-    t = min(max(t, 0.0), 1.0)
+    t = np.clip(t, 0.0, 1.0)
     return lo_gb + t * (hi_gb - lo_gb)
 
 
@@ -129,6 +135,13 @@ def tsv_area_mm2(dram_bw_Bps: float) -> float:
     """TSV keep-out area for a given stacked-DRAM bandwidth."""
     tsvs = (dram_bw_Bps * 8.0) / (TSV_GBPS * 1e9)
     return tsvs * (TSV_PITCH_UM * 1e-3) ** 2
+
+
+def tsv_area_ratio(dram_bw_tbps_per_100mm2: float) -> float:
+    """TSV field area per unit reticle area at the given stacked-DRAM
+    bandwidth density — the fixed-point factor in reticle sizing."""
+    return (dram_bw_tbps_per_100mm2 * 1e12 / 100.0) * 8.0 \
+        / (TSV_GBPS * 1e9) * (TSV_PITCH_UM * 1e-3) ** 2
 
 
 def inter_reticle_area_mm2(bw_Bps: float, integration: str) -> float:

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -110,8 +110,7 @@ class WSCDesign:
         base = self.reticle_compute_area_mm2() + phy
         if not self.use_stacked_dram:
             return base
-        ratio = (self.dram_bw_tbps_per_100mm2 * 1e12 / 100.0) * 8.0 \
-            / (C.TSV_GBPS * 1e9) * (C.TSV_PITCH_UM * 1e-3) ** 2
+        ratio = C.tsv_area_ratio(self.dram_bw_tbps_per_100mm2)
         return base / max(1.0 - ratio, 1e-3)
 
     def n_reticles(self) -> int:
@@ -229,3 +228,195 @@ def space_size_estimate() -> float:
             * (1 + 13)             # dram off / bw grid
             * 12 * 12              # reticle array
             * 2)                   # integration
+
+
+# ---------------------------------------------------------------------------
+# batched (struct-of-arrays) backend — see DESIGN.md §4
+# ---------------------------------------------------------------------------
+
+
+def floor_log2(n: np.ndarray) -> np.ndarray:
+    """Exact floor(log2(n)) for positive int arrays (float-log corrected)."""
+    n = np.maximum(np.asarray(n, dtype=np.int64), 1)
+    e = np.floor(np.log2(n.astype(np.float64))).astype(np.int64)
+    # one ulp of float error can push e off by one either way
+    e = np.where((np.int64(1) << np.minimum(e + 1, 62)) <= n, e + 1, e)
+    e = np.where((np.int64(1) << np.minimum(e, 62)) > n, e - 1, e)
+    return e
+
+
+def decode_batch(U: np.ndarray, max_core_dim: int = 32, max_ret_dim: int = 12
+                 ) -> List[WSCDesign]:
+    """Vectorized decode of (N, 13) raw points; element i == decode(U[i])."""
+    U = np.clip(np.atleast_2d(np.asarray(U, dtype=np.float64)), 0.0, 1.0)
+
+    def pow2_col(u, lo, hi):
+        v = np.maximum(lo * (hi / lo) ** u, lo)
+        p = np.round(np.log2(v)).astype(np.int64)
+        return np.clip(np.int64(1) << p, lo, hi)
+
+    df = np.minimum((U[:, 0] * 3).astype(np.int64), 2)
+    mac = pow2_col(U[:, 1], *MAC_RANGE)
+    buf = pow2_col(U[:, 2], *BUF_KB_RANGE)
+    bbw = pow2_col(U[:, 3], *BUF_BW_RANGE)
+    nbw = pow2_col(U[:, 4], *NOC_BW_RANGE)
+    ch = 1 + (U[:, 5] * (max_core_dim - 1) + 0.5).astype(np.int64)
+    cw = 1 + (U[:, 6] * (max_core_dim - 1) + 0.5).astype(np.int64)
+    ir = np.round(IR_RATIO_RANGE[0]
+                  + U[:, 7] * (IR_RATIO_RANGE[1] - IR_RATIO_RANGE[0]), 2)
+    don = U[:, 8] >= 0.5
+    dbw = np.round(DRAM_BW_RANGE[0]
+                   * (DRAM_BW_RANGE[1] / DRAM_BW_RANGE[0]) ** U[:, 9], 3)
+    rh = 1 + (U[:, 10] * (max_ret_dim - 1) + 0.5).astype(np.int64)
+    rw = 1 + (U[:, 11] * (max_ret_dim - 1) + 0.5).astype(np.int64)
+    ig = np.minimum((U[:, 12] * 2).astype(np.int64), 1)
+    return [WSCDesign(dataflow=DATAFLOWS[df[i]], mac_num=int(mac[i]),
+                      buffer_kb=int(buf[i]), buffer_bw=int(bbw[i]),
+                      noc_bw=int(nbw[i]), core_array=(int(ch[i]), int(cw[i])),
+                      inter_reticle_bw_ratio=float(ir[i]),
+                      use_stacked_dram=bool(don[i]),
+                      dram_bw_tbps_per_100mm2=float(dbw[i]),
+                      reticle_array=(int(rh[i]), int(rw[i])),
+                      integration=INTEGRATIONS[ig[i]])
+            for i in range(len(U))]
+
+
+def encode_batch(designs: Sequence[WSCDesign], max_core_dim: int = 32,
+                 max_ret_dim: int = 12) -> np.ndarray:
+    """Vectorized encode: row i == encode(designs[i]). Returns (N, 13)."""
+    def log_u(v, lo, hi):
+        return np.log(np.asarray(v, np.float64) / lo) / math.log(hi / lo)
+
+    cols = np.stack([
+        np.array([DATAFLOWS.index(d.dataflow) for d in designs], np.float64) / 2.0,
+        log_u([d.mac_num for d in designs], *MAC_RANGE),
+        log_u([d.buffer_kb for d in designs], *BUF_KB_RANGE),
+        log_u([d.buffer_bw for d in designs], *BUF_BW_RANGE),
+        log_u([d.noc_bw for d in designs], *NOC_BW_RANGE),
+        (np.array([d.core_array[0] for d in designs], np.float64) - 1)
+        / (max_core_dim - 1),
+        (np.array([d.core_array[1] for d in designs], np.float64) - 1)
+        / (max_core_dim - 1),
+        (np.array([d.inter_reticle_bw_ratio for d in designs]) - IR_RATIO_RANGE[0])
+        / (IR_RATIO_RANGE[1] - IR_RATIO_RANGE[0]),
+        np.array([1.0 if d.use_stacked_dram else 0.0 for d in designs]),
+        log_u([d.dram_bw_tbps_per_100mm2 for d in designs], *DRAM_BW_RANGE),
+        (np.array([d.reticle_array[0] for d in designs], np.float64) - 1)
+        / (max_ret_dim - 1),
+        (np.array([d.reticle_array[1] for d in designs], np.float64) - 1)
+        / (max_ret_dim - 1),
+        np.array([0.0 if d.integration == INTEGRATIONS[0] else 1.0
+                  for d in designs]),
+    ], axis=1)
+    return cols
+
+
+@dataclasses.dataclass
+class DesignBatch:
+    """Struct-of-arrays view of N designs: the vector encoding plus every
+    derived geometry quantity the evaluation stack needs, all computed with
+    vectorized NumPy so downstream kernels broadcast over a leading batch
+    axis instead of calling per-design methods (DESIGN.md §4)."""
+    designs: List[WSCDesign]
+    # raw knobs
+    dataflow_code: np.ndarray      # (N,) 0=WS 1=IS 2=OS
+    mac: np.ndarray                # (N,) int64
+    buffer_kb: np.ndarray
+    buffer_bw: np.ndarray
+    noc_bw: np.ndarray
+    core_h: np.ndarray
+    core_w: np.ndarray
+    ir_ratio: np.ndarray
+    dram_on: np.ndarray            # (N,) bool
+    dram_bw_tbps: np.ndarray
+    ret_h: np.ndarray
+    ret_w: np.ndarray
+    integ_code: np.ndarray         # 0=die_stitching 1=infosow
+    spares_per_row: np.ndarray
+    # derived geometry (all float64 unless noted)
+    core_area_mm2: np.ndarray
+    cores_per_reticle: np.ndarray  # int64
+    n_reticles: np.ndarray         # int64
+    total_cores: np.ndarray        # int64
+    reticle_bisection_Bps: np.ndarray
+    inter_reticle_bw_Bps: np.ndarray
+    reticle_area_mm2: np.ndarray
+    wafer_area_mm2: np.ndarray
+    dram_bw_Bps_per_reticle: np.ndarray
+    dram_gb_per_reticle: np.ndarray
+    static_power_w: np.ndarray
+    ir_energy_pj_per_bit: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.designs)
+
+    @staticmethod
+    def from_designs(designs: Sequence[WSCDesign]) -> "DesignBatch":
+        designs = list(designs)
+        df = np.array([DATAFLOWS.index(d.dataflow) for d in designs], np.int64)
+        mac = np.array([d.mac_num for d in designs], np.int64)
+        buf_kb = np.array([d.buffer_kb for d in designs], np.int64)
+        buf_bw = np.array([d.buffer_bw for d in designs], np.int64)
+        noc_bw = np.array([d.noc_bw for d in designs], np.int64)
+        ch = np.array([d.core_array[0] for d in designs], np.int64)
+        cw = np.array([d.core_array[1] for d in designs], np.int64)
+        ir = np.array([d.inter_reticle_bw_ratio for d in designs], np.float64)
+        don = np.array([d.use_stacked_dram for d in designs], bool)
+        dbw = np.array([d.dram_bw_tbps_per_100mm2 for d in designs], np.float64)
+        rh = np.array([d.reticle_array[0] for d in designs], np.int64)
+        rw = np.array([d.reticle_array[1] for d in designs], np.int64)
+        ig = np.array([INTEGRATIONS.index(d.integration) for d in designs],
+                      np.int64)
+        spares = np.array([d.spares_per_row for d in designs], np.int64)
+
+        # components helpers are dtype-polymorphic: same formulas/constants
+        # as the scalar WSCDesign methods, applied to the whole batch
+        core_area = C.core_area_mm2(mac, buf_kb, buf_bw, noc_bw)
+
+        cpr = ch * cw
+        nret = rh * rw
+        total = cpr * nret
+        bisect = np.minimum(ch, cw) * noc_bw / 8.0 * C.CLOCK_HZ
+        ir_bw = ir * bisect
+
+        # --- reticle area fixed point (WSCDesign.reticle_area_mm2) ---------
+        phy = (4.0 * ir_bw) * 8e-9 * np.where(
+            ig == 1, C.IR_AREA_UM2_PER_GBPS["infosow"],
+            C.IR_AREA_UM2_PER_GBPS["die_stitching"]) * 1e-6
+        compute_a = (cw + spares) * ch * core_area
+        base = compute_a + phy
+        tsv_ratio = C.tsv_area_ratio(dbw)
+        r_area = np.where(don, base / np.maximum(1.0 - tsv_ratio, 1e-3), base)
+
+        dram_bw_Bps = np.where(don, dbw * 1e12 * r_area / 100.0, 0.0)
+        dram_gb = np.where(don, C.dram_gb_at_bw(dbw) * r_area / 100.0, 0.0)
+
+        per_core_w = C.core_static_w(mac, buf_kb)
+        static_w = per_core_w * total + C.DRAM_STATIC_W_PER_GB * dram_gb * nret
+
+        ir_pj = np.where(ig == 1, C.IR_ENERGY_PJ_PER_BIT["infosow"],
+                         C.IR_ENERGY_PJ_PER_BIT["die_stitching"])
+
+        return DesignBatch(
+            designs=designs, dataflow_code=df, mac=mac, buffer_kb=buf_kb,
+            buffer_bw=buf_bw, noc_bw=noc_bw, core_h=ch, core_w=cw,
+            ir_ratio=ir, dram_on=don, dram_bw_tbps=dbw, ret_h=rh, ret_w=rw,
+            integ_code=ig, spares_per_row=spares, core_area_mm2=core_area,
+            cores_per_reticle=cpr, n_reticles=nret, total_cores=total,
+            reticle_bisection_Bps=bisect, inter_reticle_bw_Bps=ir_bw,
+            reticle_area_mm2=r_area, wafer_area_mm2=nret * r_area,
+            dram_bw_Bps_per_reticle=dram_bw_Bps, dram_gb_per_reticle=dram_gb,
+            static_power_w=static_w, ir_energy_pj_per_bit=ir_pj)
+
+    def take(self, idx: np.ndarray) -> "DesignBatch":
+        """Gather rows (with repetition) — used to expand designs to the
+        flattened (design, strategy) candidate axis."""
+        idx = np.asarray(idx, np.int64)
+        kw = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if f.name == "designs":
+                kw[f.name] = [self.designs[i] for i in idx]
+            else:
+                kw[f.name] = v[idx]
+        return DesignBatch(**kw)

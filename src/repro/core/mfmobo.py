@@ -5,9 +5,18 @@ notes CA simulation is kept out of the loop for cost), GP surrogates per
 (fidelity x objective), EHVI acquisition with hypervolume reference
 (throughput 0, peak power). The schedule:
 
-    iterations [0, N1-d1):            evaluate f1, acquire with M1
-    iterations [N1-d1, N1-d1+k):      evaluate f0, acquire with M1 (handover)
-    iterations [N1-d1+k, ...):        evaluate f0, acquire with M0
+    evaluations [0, N1-d1):           evaluate f1, acquire with M1
+    evaluations [N1-d1, N1-d1+k):     evaluate f0, acquire with M1 (handover)
+    evaluations [N1-d1+k, ...):       evaluate f0, acquire with M0
+
+Each iteration proposes a batch of q candidates by greedy q-EHVI with
+fantasized observations (DESIGN.md §5): pick the EHVI argmax, condition the
+GPs on its posterior mean (GP.condition_on), extend the fantasy front, and
+repeat — then evaluate the whole batch in one call. Evaluation functions
+may be scalar (design -> (throughput, power)) or batch-aware (marked with
+`.batched = True`, e.g. `evaluator.batched_objectives`), in which case the
+whole proposal is scored in a single vectorized pass. With q=1 the loop is
+the paper's serial Algorithm 1.
 
 Baselines for Fig. 8: random search and single-fidelity MOBO.
 """
@@ -15,11 +24,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.design_space import WSCDesign, decode, sample
+from repro.core.design_space import WSCDesign, decode_batch, sample
 from repro.core.ehvi import ehvi_2d
 from repro.core.gp import GP
 from repro.core.pareto import hypervolume_2d, pareto_front, to_max_space
@@ -33,8 +42,9 @@ class Trace:
     xs: List[np.ndarray]
     designs: List[WSCDesign]
     ys: List[Tuple[float, float]]         # (throughput, power)
-    hv: List[float]                       # hypervolume after each iteration
+    hv: List[float]                       # hypervolume after each evaluation
     wall_s: List[float]
+    n_evals: int = 0                      # total evals incl. f1-only points
 
     def points_max(self) -> np.ndarray:
         t = np.array([y[0] for y in self.ys])
@@ -45,12 +55,21 @@ class Trace:
         return pareto_front(self.points_max())
 
 
+def _eval_many(f: EvalFn, designs: Sequence[WSCDesign]
+               ) -> List[Tuple[float, float]]:
+    """Evaluate a proposal batch: one vectorized call for batch-aware
+    objective functions, a scalar loop otherwise."""
+    if getattr(f, "batched", False):
+        return [(float(t), float(p)) for t, p in f(list(designs))]
+    return [(float(y[0]), float(y[1])) for y in (f(d) for d in designs)]
+
+
 def _valid_candidates(rng: np.random.Generator, n: int,
                       max_tries: int = 8) -> Tuple[np.ndarray, List[WSCDesign]]:
     xs, ds = [], []
     for _ in range(max_tries):
-        for u in sample(rng, n):
-            d = decode(u)
+        us = sample(rng, n)
+        for u, d in zip(us, decode_batch(us)):
             r = validate(d)
             if r.ok:
                 xs.append(u)
@@ -66,16 +85,39 @@ def _fit_models(X: np.ndarray, Y: np.ndarray) -> Tuple[GP, GP]:
     return g_t, g_p
 
 
+def _acquire_batch(models: Tuple[GP, GP], cand_x: np.ndarray,
+                   evaluated: np.ndarray, ref: np.ndarray,
+                   q: int = 1) -> List[int]:
+    """Greedy q-EHVI with fantasized observations. Returns q distinct
+    candidate indices; q=1 reduces exactly to the scalar EHVI argmax."""
+    g_t, g_p = models
+    fantasy_pts = np.asarray(evaluated, float).reshape(-1, 2)
+    chosen: List[int] = []
+    q = max(1, min(q, len(cand_x)))
+    while len(chosen) < q:
+        mu_t, s_t = g_t.predict(cand_x)
+        mu_p, s_p = g_p.predict(cand_x)
+        mu = np.stack([mu_t, mu_p], 1)
+        sg = np.stack([s_t, s_p], 1)
+        front = (pareto_front(fantasy_pts) if len(fantasy_pts)
+                 else np.zeros((0, 2)))
+        scores = ehvi_2d(mu, sg, front, ref)
+        if chosen:
+            scores[np.asarray(chosen)] = -np.inf
+        j = int(np.argmax(scores))
+        chosen.append(j)
+        if len(chosen) == q:
+            break
+        # fantasize the observation at the posterior mean and condition
+        g_t = g_t.condition_on(cand_x[j], float(mu_t[j]))
+        g_p = g_p.condition_on(cand_x[j], float(mu_p[j]))
+        fantasy_pts = np.concatenate([fantasy_pts, mu[j:j + 1]], axis=0)
+    return chosen
+
+
 def _acquire(models: Tuple[GP, GP], cand_x: np.ndarray,
              evaluated: np.ndarray, ref: np.ndarray) -> int:
-    g_t, g_p = models
-    mu_t, s_t = g_t.predict(cand_x)
-    mu_p, s_p = g_p.predict(cand_x)
-    mu = np.stack([mu_t, mu_p], 1)
-    sg = np.stack([s_t, s_p], 1)
-    front = pareto_front(evaluated) if len(evaluated) else np.zeros((0, 2))
-    scores = ehvi_2d(mu, sg, front, ref)
-    return int(np.argmax(scores))
+    return _acquire_batch(models, cand_x, evaluated, ref, q=1)[0]
 
 
 def _obj_space(ys: List[Tuple[float, float]]) -> np.ndarray:
@@ -92,7 +134,7 @@ def _hv_ref(peak_power: float) -> np.ndarray:
 def run_mfmobo(f0: EvalFn, f1: EvalFn, *, d0: int = 3, d1: int = 3,
                k: int = 5, N0: int = 20, N1: int = 30,
                peak_power: float = 15000.0, n_candidates: int = 256,
-               seed: int = 0) -> Trace:
+               q: int = 1, seed: int = 0) -> Trace:
     rng = np.random.default_rng(seed)
     ref = _hv_ref(peak_power)
     tr = Trace([], [], [], [], [])
@@ -107,24 +149,29 @@ def run_mfmobo(f0: EvalFn, f1: EvalFn, *, d0: int = 3, d1: int = 3,
         tr.hv.append(hypervolume_2d(pts, ref))
         tr.wall_s.append(time.time())
 
-    # priors
+    # priors: the f1 warm-up batch and the f0 batch each evaluate together
     init_x, init_d = _valid_candidates(rng, d0 + d1)
-    for i in range(d1):
-        y = f1(init_d[i])
-        X1.append(init_x[i]); Y1.append(y)
-    for i in range(d1, d1 + d0):
-        y = f0(init_d[i])
-        X0.append(init_x[i]); Y0.append(y)
-        record(init_x[i], init_d[i], y)
+    ys1 = _eval_many(f1, init_d[:d1])
+    tr.n_evals += len(ys1)
+    for x, d, y in zip(init_x[:d1], init_d[:d1], ys1):
+        X1.append(x); Y1.append(y)
+    ys0 = _eval_many(f0, init_d[d1:d1 + d0])
+    tr.n_evals += len(ys0)
+    for x, d, y in zip(init_x[d1:d1 + d0], init_d[d1:d1 + d0], ys0):
+        X0.append(x); Y0.append(y)
+        record(x, d, y)
 
     total = N0 + N1 - d0 - d1
-    use_f0 = False
-    use_m0 = False
-    for i in range(total):
-        if i == N1 - d1:
-            use_f0 = True
-        if i == N1 - d1 + k:
-            use_m0 = True
+    done = 0
+    while done < total:
+        use_f0 = done >= N1 - d1
+        use_m0 = done >= N1 - d1 + k
+        # batch size: q, clipped to the remaining budget and to the next
+        # fidelity-schedule boundary so every evaluation in the batch runs
+        # at the fidelity the schedule assigns it
+        boundaries = [b for b in (N1 - d1, N1 - d1 + k, total) if b > done]
+        q_eff = max(1, min(q, min(boundaries) - done))
+
         cand_x, cand_d = _valid_candidates(rng, n_candidates)
         if use_m0 and len(X0) >= 2:
             models = _fit_models(np.array(X0), np.array(Y0))
@@ -132,42 +179,48 @@ def run_mfmobo(f0: EvalFn, f1: EvalFn, *, d0: int = 3, d1: int = 3,
         else:
             models = _fit_models(np.array(X1), np.array(Y1))
             ev = _obj_space(Y1) if not use_f0 or not Y0 else _obj_space(Y0)
-        j = _acquire(models, cand_x, ev, ref)
-        x, d = cand_x[j], cand_d[j]
-        if use_f0:
-            y = f0(d)
-            X0.append(x); Y0.append(y)
-            record(x, d, y)
-        else:
-            y = f1(d)
-            X1.append(x); Y1.append(y)
+        js = _acquire_batch(models, cand_x, ev, ref, q=q_eff)
+        batch_d = [cand_d[j] for j in js]
+        ys = _eval_many(f0 if use_f0 else f1, batch_d)
+        tr.n_evals += len(ys)
+        for j, y in zip(js, ys):
+            if use_f0:
+                X0.append(cand_x[j]); Y0.append(y)
+                record(cand_x[j], cand_d[j], y)
+            else:
+                X1.append(cand_x[j]); Y1.append(y)
+        done += len(js)
     return tr
 
 
 def run_mobo(f0: EvalFn, *, d0: int = 6, N: int = 20,
              peak_power: float = 15000.0, n_candidates: int = 256,
-             seed: int = 0) -> Trace:
+             q: int = 1, seed: int = 0) -> Trace:
     """Single-fidelity MOBO baseline (paper Fig. 8)."""
     rng = np.random.default_rng(seed)
     ref = _hv_ref(peak_power)
     tr = Trace([], [], [], [], [])
     X, Y = [], []
-    init_x, init_d = _valid_candidates(rng, d0)
-    for i in range(len(init_x)):
-        y = f0(init_d[i])
-        X.append(init_x[i]); Y.append(y)
-        tr.xs.append(init_x[i]); tr.designs.append(init_d[i]); tr.ys.append(y)
+
+    def record(x, d, y):
+        X.append(x); Y.append(y)
+        tr.xs.append(x); tr.designs.append(d); tr.ys.append(y)
         tr.hv.append(hypervolume_2d(_obj_space(tr.ys), ref))
         tr.wall_s.append(time.time())
-    for i in range(N - d0):
+        tr.n_evals += 1
+
+    init_x, init_d = _valid_candidates(rng, d0)
+    for x, d, y in zip(init_x, init_d, _eval_many(f0, init_d)):
+        record(x, d, y)
+    done = 0
+    while done < N - d0:
+        q_eff = max(1, min(q, N - d0 - done))
         models = _fit_models(np.array(X), np.array(Y))
         cand_x, cand_d = _valid_candidates(rng, n_candidates)
-        j = _acquire(models, cand_x, _obj_space(Y), ref)
-        y = f0(cand_d[j])
-        X.append(cand_x[j]); Y.append(y)
-        tr.xs.append(cand_x[j]); tr.designs.append(cand_d[j]); tr.ys.append(y)
-        tr.hv.append(hypervolume_2d(_obj_space(tr.ys), ref))
-        tr.wall_s.append(time.time())
+        js = _acquire_batch(models, cand_x, _obj_space(Y), ref, q=q_eff)
+        for j, y in zip(js, _eval_many(f0, [cand_d[j] for j in js])):
+            record(cand_x[j], cand_d[j], y)
+        done += len(js)
     return tr
 
 
@@ -177,9 +230,9 @@ def run_random(f0: EvalFn, *, N: int = 20, peak_power: float = 15000.0,
     ref = _hv_ref(peak_power)
     tr = Trace([], [], [], [], [])
     xs, ds = _valid_candidates(rng, N)
-    for x, d in zip(xs, ds):
-        y = f0(d)
+    for x, d, y in zip(xs, ds, _eval_many(f0, ds)):
         tr.xs.append(x); tr.designs.append(d); tr.ys.append(y)
         tr.hv.append(hypervolume_2d(_obj_space(tr.ys), ref))
         tr.wall_s.append(time.time())
+        tr.n_evals += 1
     return tr

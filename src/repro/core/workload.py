@@ -7,6 +7,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
+import numpy as np
+
 from repro.configs.base import ModelConfig, ShapeConfig
 
 BYTES = 2          # bf16 activations/weights on-wafer
@@ -84,6 +86,30 @@ class LLMWorkload:
             GEMMOp("mlp_out", M * e, F // tp, D),
         ]
         return ops
+
+    def layer_ops_batch(self, tp, mb_tokens):
+        """Vectorized `layer_ops`: `tp`/`mb_tokens` are (C,) int arrays, the
+        result is a dict of (n_ops, C) int arrays M/K/N plus the static
+        `weight` flags — column c reproduces layer_ops(tp[c], mb_tokens[c])
+        exactly (integer semantics included)."""
+        tp = np.asarray(tp, np.int64)
+        M = np.asarray(mb_tokens, np.int64)
+        D, F = self.d_model, self.d_ff
+        hd = D // max(self.n_heads, 1)
+        kv_len = (np.full_like(M, self.seq) if self.phase == "decode"
+                  else M // self.batch)
+        e = self.moe_topk if self.moe_experts else 1
+        heads_tp = np.maximum(self.n_heads // tp, 1)
+        m_attn = M * heads_tp // max(self.n_heads, 1)
+        zeros = np.zeros_like(M)
+        Ms = np.stack([M, m_attn, m_attn, M, M * e, M * e])
+        Ks = np.stack([zeros + D, zeros + hd, kv_len,
+                       self.n_heads * hd // tp, zeros + D, F // tp])
+        Ns = np.stack([(self.n_heads + 2 * self.n_kv) * hd // tp, kv_len,
+                       zeros + hd, zeros + D, 2 * F // tp, zeros + D])
+        weight = (True, False, False, True, True, True)
+        names = ("qkv", "scores", "attnv", "attn_out", "mlp_in", "mlp_out")
+        return {"M": Ms, "K": Ks, "N": Ns, "weight": weight, "names": names}
 
     def flops_per_step(self) -> float:
         mult = 3.0 if self.phase == "train" else 1.0   # fwd+bwd ~ 3x fwd

@@ -197,6 +197,135 @@ def test_evaluate_design_feasible_and_scales():
     assert r1.power_w > 0
 
 
+def test_injection_rates_zero_cycle_guard():
+    d = _design()
+    wl = GPT_BENCHMARKS[0]
+    g = compile_chunk(d, wl, tp=16, mb_tokens=2048, cores_per_chunk=64)
+    r = g.injection_rates(d.noc_bw)
+    assert r.shape == (g.n_cores,) and np.isfinite(r).all()
+    # zero-runtime chunk: no cycles to average over -> zero injection
+    import dataclasses as _dc
+    empty = _dc.replace(g, ops=[])
+    assert (empty.injection_rates(d.noc_bw) == 0).all()
+
+
+# --------------------------- batched backend --------------------------------
+
+
+def test_decode_encode_batch_match_scalar():
+    from repro.core.design_space import decode_batch, encode_batch
+
+    rng = np.random.default_rng(5)
+    U = sample(rng, 32)
+    ds = decode_batch(U)
+    assert ds == [decode(u) for u in U]
+    E = encode_batch(ds)
+    for i, d in enumerate(ds):
+        assert np.allclose(E[i], encode(d), atol=1e-12)
+
+
+def test_design_batch_geometry_matches_scalar_methods():
+    from repro.core.design_space import DesignBatch
+
+    rng = np.random.default_rng(6)
+    ds = [r.design for r in (validate(decode(u)) for u in sample(rng, 48))
+          if r.ok]
+    g = DesignBatch.from_designs(ds)
+    for i, d in enumerate(ds):
+        assert g.total_cores[i] == d.total_cores()
+        assert np.isclose(g.core_area_mm2[i], d.core_area_mm2(), rtol=1e-12)
+        assert np.isclose(g.reticle_area_mm2[i], d.reticle_area_mm2(),
+                          rtol=1e-12)
+        assert np.isclose(g.wafer_area_mm2[i], d.wafer_area_mm2(), rtol=1e-12)
+        assert np.isclose(g.inter_reticle_bw_Bps[i], d.inter_reticle_bw_Bps())
+        assert np.isclose(g.static_power_w[i], d.static_power_w(), rtol=1e-12)
+        assert np.isclose(g.dram_gb_per_reticle[i], d.dram_gb_per_reticle())
+    sub = g.take(np.array([1, 1, 0]))
+    assert sub.designs == [ds[1], ds[1], ds[0]]
+    assert (sub.total_cores == g.total_cores[[1, 1, 0]]).all()
+
+
+def test_tile_batch_matches_scalar():
+    from repro.core.tile_eval import DATAFLOW_CODE, evaluate_tile_batch
+
+    rng = np.random.default_rng(7)
+    Ms, Ks, Ns = (rng.integers(1, 3000, 64) for _ in range(3))
+    macs = 2 ** rng.integers(3, 13, 64)
+    bkb = 2 ** rng.integers(5, 12, 64)
+    bbw = 2 ** rng.integers(5, 13, 64)
+    codes = rng.integers(0, 3, 64)
+    inv = {v: k for k, v in DATAFLOW_CODE.items()}
+    out = evaluate_tile_batch(Ms, Ks, Ns, macs, bkb.astype(float), bbw, codes)
+    for i in range(64):
+        r = evaluate_tile(GEMMOp("g", int(Ms[i]), int(Ks[i]), int(Ns[i])),
+                          int(macs[i]), int(bkb[i]), int(bbw[i]),
+                          inv[int(codes[i])])
+        assert np.isclose(out["cycles"][i], r.cycles, rtol=1e-12)
+        assert np.isclose(out["sram_read_bits"][i], r.sram_read_bits,
+                          rtol=1e-12)
+        assert np.isclose(out["out_interval_cycles"][i],
+                          r.out_interval_cycles, rtol=1e-12)
+
+
+def test_feasible_strategy_arrays_match_scalar_enumeration():
+    from repro.core.compiler import feasible_strategy_arrays, strategy_sort_key
+
+    d = _design()
+    for wl in (GPT_BENCHMARKS[0], GPT_BENCHMARKS[2]):
+        for nw in (1, 4):
+            ref = sorted(enumerate_strategies(d, wl, n_wafers=nw),
+                         key=strategy_sort_key)[:24]
+            total = d.total_cores() * nw
+            budget = (d.buffer_kb * 1024.0 * total
+                      + d.dram_gb_per_reticle() * 1e9 * d.n_reticles() * nw)
+            arr = feasible_strategy_arrays(wl, total, budget, 24)
+            got = [Strategy(int(a), int(b), int(c), int(m))
+                   for a, b, c, m in arr]
+            assert got == ref
+
+
+def test_evaluate_design_batch_matches_scalar_and_is_cached():
+    from repro.core.evaluator import (clear_eval_cache, eval_cache_stats,
+                                      evaluate_design_batch)
+
+    rng = np.random.default_rng(8)
+    ds = [r.design for r in (validate(decode(u)) for u in sample(rng, 24))
+          if r.ok][:8]
+    wl = GPT_BENCHMARKS[0]
+    clear_eval_cache()
+    batch = evaluate_design_batch(ds, wl, max_strategies=12)
+    clear_eval_cache()
+    for d, b in zip(ds, batch):
+        a = evaluate_design(d, wl, max_strategies=12)
+        assert a.feasible == b.feasible
+        if a.feasible:
+            assert a.strategy == b.strategy
+            assert np.isclose(a.throughput, b.throughput, rtol=1e-6)
+            assert np.isclose(a.power_w, b.power_w, rtol=1e-6)
+    # cross-call cache: scalar results above now serve the batch entrypoint
+    before = eval_cache_stats()["hits"]
+    again = evaluate_design_batch(ds, wl, max_strategies=12)
+    assert eval_cache_stats()["hits"] == before + len(ds)
+    assert [r.throughput for r in again] == [r.throughput for r in batch]
+
+
+def test_chunk_latency_closed_form_matches_graph():
+    from repro.core.compiler import grid_for_batch
+    from repro.core.noc_analytical import chunk_latency_cycles_closed
+
+    d = _design()
+    wl = GPT_BENCHMARKS[0]
+    for tp, mbt, cpc in ((16, 2048, 64), (4, 512, 17), (1, 128, 1)):
+        g = compile_chunk(d, wl, tp=tp, mb_tokens=mbt, cores_per_chunk=cpc)
+        ref = chunk_latency_cycles(g, d)
+        tiles = np.array([[o.tile.cycles] for o in g.ops])
+        outb = np.array([[o.op.out_bytes()] for o in g.ops])
+        gh, gw = grid_for_batch(np.asarray([min(cpc, 64)]))
+        got = chunk_latency_cycles_closed(tiles, outb, gh, gw,
+                                          np.asarray([d.noc_bw]))[0]
+        assert np.isclose(ref, got, rtol=1e-12)
+
+
 def test_workload_bridge_from_model_config():
     from repro.configs import get_config, get_shape
     cfg = get_config("mixtral-8x7b")

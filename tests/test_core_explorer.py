@@ -64,6 +64,47 @@ def test_ehvi_zero_for_deeply_dominated():
     assert v < 1e-6
 
 
+def test_gp_condition_on_fantasy_update():
+    """Rank-1 conditioning pins the posterior near the fantasized value and
+    shrinks uncertainty there, without touching hyperparameters."""
+    rng = np.random.default_rng(4)
+    X = rng.random((25, 3))
+    y = np.sin(3 * X[:, 0]) + X[:, 1]
+    gp = GP.fit(X, y, iters=50)
+    xs = rng.random(3)
+    mu0, sd0 = gp.predict(xs[None])
+    gp2 = gp.condition_on(xs, float(mu0[0]) + 0.3)
+    mu1, sd1 = gp2.predict(xs[None])
+    assert sd1[0] < sd0[0]
+    assert mu1[0] > mu0[0]                      # pulled toward the fantasy
+    assert gp2.params is gp.params              # no refit
+    mu2, sd2 = gp2.predict(X[:5])
+    assert np.isfinite(mu2).all() and (sd2 > 0).all()
+
+
+def test_mobo_batched_proposals_with_batch_eval_fn():
+    """q>1 proposals + a batch-aware objective: the loop evaluates whole
+    batches in one call and still only spends the evaluation budget."""
+    from repro.core.mfmobo import run_mobo
+    from repro.core.design_space import encode_batch
+
+    calls = {"n": 0, "sizes": []}
+
+    def f(designs):
+        calls["n"] += 1
+        calls["sizes"].append(len(designs))
+        U = encode_batch(designs)
+        return [(float(1e5 * (1 + u[1] + u[4])),
+                 float(5e3 * (0.5 + u[1] ** 2))) for u in U]
+    f.batched = True
+
+    tr = run_mobo(f, d0=3, N=9, n_candidates=32, q=3, seed=0)
+    assert len(tr.ys) == 9
+    assert tr.hv[-1] >= tr.hv[0]
+    assert max(calls["sizes"]) == 3             # proposals arrive as batches
+    assert sum(calls["sizes"]) == 9
+
+
 def test_mfmobo_loop_improves_hypervolume():
     """MFMOBO on a cheap synthetic 2-objective problem over the WSC space:
     maximize (throughput-proxy, -power-proxy) from the encoded vector."""
