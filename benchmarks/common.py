@@ -49,14 +49,17 @@ _GNN_CACHE = {}
 
 def trained_gnn(n_designs: int = 8, epochs: int = 40, seed: int = 0,
                 quick: bool = False):
-    """Train (and memoize) the GNN congestion model on noc_sim traces."""
+    """Train (and memoize) the GNN congestion model on noc_sim traces, with
+    a held-out validation split: the returned info records per-epoch train
+    loss plus validation loss / Kendall-tau so downstream consumers (and
+    the online calibration loop) can judge checkpoint quality."""
     key = (n_designs, epochs, seed, quick)
     if key in _GNN_CACHE:
         return _GNN_CACHE[key]
     import jax
 
-    from repro.core.compiler import compile_chunk
-    from repro.core.noc_gnn import featurize_transfer, init_gnn, train_gnn
+    from repro.core.calibration import build_calibration_set
+    from repro.core.noc_gnn import init_gnn, train_gnn
     from repro.core.workload import GPT_BENCHMARKS
 
     if quick:
@@ -64,34 +67,27 @@ def trained_gnn(n_designs: int = 8, epochs: int = 40, seed: int = 0,
     designs = sample_valid_designs(n_designs, seed=seed)
     dataset = []
     for wl in (GPT_BENCHMARKS[0], GPT_BENCHMARKS[2]):
-        for d in designs:
-            for tp, mbt in ((16, 4096), (64, 1024)):
-                g = compile_chunk(d, wl, tp=tp, mb_tokens=mbt,
-                                  cores_per_chunk=64)
-                for t in range(len(g.transfers)):
-                    if g.transfers[t].pairs:
-                        dataset.append(
-                            featurize_transfer(g, d, t, with_target=True))
+        dataset.extend(build_calibration_set(designs, wl))
     params = init_gnn(jax.random.PRNGKey(seed))
     t0 = time.time()
-    params, losses = train_gnn(params, dataset, epochs=epochs)
+    params, hist = train_gnn(params, dataset, epochs=epochs, val_frac=0.2,
+                             patience=max(epochs // 4, 3))
     info = {"n_graphs": len(dataset), "train_s": time.time() - t0,
-            "loss_first": losses[0], "loss_last": losses[-1]}
+            "loss_first": hist.train_loss[0],
+            "loss_last": hist.train_loss[-1],
+            # metrics of the checkpoint actually returned (best epoch)
+            "val_loss": hist.best_val_loss,
+            "val_kendall_tau": hist.best_val_kendall_tau,
+            "best_epoch": hist.best_epoch,
+            "stopped_epoch": hist.stopped_epoch}
     _GNN_CACHE[key] = (params, info)
     return params, info
 
 
-def kendall_tau(a: np.ndarray, b: np.ndarray) -> float:
-    """Kendall rank correlation (O(n^2), fine for benchmark sizes)."""
-    a, b = np.asarray(a), np.asarray(b)
-    n = len(a)
-    num = 0
-    den = 0
-    for i in range(n):
-        for j in range(i + 1, n):
-            sa = np.sign(a[i] - a[j])
-            sb = np.sign(b[i] - b[j])
-            if sa and sb:
-                num += int(sa == sb) - int(sa != sb)
-                den += 1
-    return num / max(den, 1)
+def kendall_tau(a: np.ndarray, b: np.ndarray, **kw) -> float:
+    """Kendall rank correlation. Thin lazy wrapper over the canonical
+    vectorized implementation in repro.core.noc_gnn — imported at call time
+    so that jax-free consumers of this module (e.g. roofline_table) don't
+    pay the jax import at startup."""
+    from repro.core.noc_gnn import kendall_tau as _kt
+    return _kt(a, b, **kw)

@@ -1,8 +1,11 @@
 """Fig. 7 reproduction: evaluation-model speedup + accuracy vs the
 cycle-approximate simulator (our CA-sim stand-in, DESIGN.md §3).
 
-For a set of (design, workload) chunk compilations:
-  (a) wall-time of sim / analytical / GNN chunk evaluation,
+Chunk latencies are dispatched through the fidelity backend registry
+(repro.core.fidelity), so this benchmark exercises exactly the estimators
+the explorer uses. For a set of (design, workload) chunk compilations:
+  (a) wall-time of sim / analytical / GNN chunk evaluation (scalar
+      reference paths) plus the batched design-level path per fidelity,
   (b) latency error of analytical + GNN vs sim,
   (c) Kendall's tau rank correlation vs sim across designs.
 """
@@ -13,11 +16,15 @@ from typing import Dict
 
 import numpy as np
 
-from benchmarks.common import kendall_tau, sample_valid_designs, save_artifact, trained_gnn
+from benchmarks.common import (
+    kendall_tau,
+    sample_valid_designs,
+    save_artifact,
+    trained_gnn,
+)
 from repro.core.compiler import compile_chunk
-from repro.core.noc_analytical import chunk_latency_cycles
-from repro.core.noc_gnn import chunk_latency_cycles_gnn
-from repro.core.noc_sim import chunk_latency_cycles_sim
+from repro.core.evaluator import clear_eval_cache, evaluate_design_batch
+from repro.core.fidelity import get_backend
 from repro.core.workload import GPT_BENCHMARKS
 
 
@@ -26,6 +33,8 @@ def run(quick: bool = False) -> Dict:
     n_eval = 6 if quick else 12
     designs = sample_valid_designs(n_eval, seed=7)
     bench = GPT_BENCHMARKS[:2] if quick else GPT_BENCHMARKS[:4]
+    backends = {name: get_backend(name)
+                for name in ("sim", "analytical", "gnn")}
     rows = []
     for wl in bench:
         sims, anas, gnns = [], [], []
@@ -33,9 +42,15 @@ def run(quick: bool = False) -> Dict:
         for d in designs:
             g = compile_chunk(d, wl, tp=16, mb_tokens=2048,
                               cores_per_chunk=64)
-            t0 = time.time(); s = chunk_latency_cycles_sim(g, d); t_sim += time.time() - t0
-            t0 = time.time(); a = chunk_latency_cycles(g, d); t_ana += time.time() - t0
-            t0 = time.time(); gn = chunk_latency_cycles_gnn(gnn, g, d); t_gnn += time.time() - t0
+            t0 = time.time()
+            s = backends["sim"].chunk_latency(g, d)
+            t_sim += time.time() - t0
+            t0 = time.time()
+            a = backends["analytical"].chunk_latency(g, d)
+            t_ana += time.time() - t0
+            t0 = time.time()
+            gn = backends["gnn"].chunk_latency(g, d, gnn)
+            t_gnn += time.time() - t0
             sims.append(s); anas.append(a); gnns.append(gn)
         sims, anas, gnns = map(np.array, (sims, anas, gnns))
         rows.append({
@@ -47,7 +62,20 @@ def run(quick: bool = False) -> Dict:
             "kt_analytical": kendall_tau(anas, sims),
             "kt_gnn": kendall_tau(gnns, sims),
         })
-    out = {"gnn_training": info, "rows": rows}
+
+    # batched design-level throughput per fidelity on the first workload
+    wl = bench[0]
+    batched_cps = {}
+    for name in ("analytical", "gnn", "sim"):
+        kw = {"gnn_params": gnn} if name == "gnn" else {}
+        clear_eval_cache()
+        t0 = time.time()
+        evaluate_design_batch(designs, wl, fidelity=name,
+                              max_strategies=8, **kw)
+        batched_cps[name] = len(designs) / max(time.time() - t0, 1e-9)
+
+    out = {"gnn_training": info, "rows": rows,
+           "batched_candidates_per_sec": batched_cps}
     save_artifact("fig7_eval_models", out)
     print(f"\n=== Fig.7: evaluation models vs CA-sim ===")
     print(f"{'workload':12s}{'spd(ana)':>10s}{'spd(gnn)':>10s}"
@@ -57,6 +85,8 @@ def run(quick: bool = False) -> Dict:
               f"{r['speedup_gnn']:10.1f}{r['err_analytical_pct']:11.2f}"
               f"{r['err_gnn_pct']:11.2f}{r['kt_analytical']:9.2f}"
               f"{r['kt_gnn']:9.2f}")
+    print("batched design-level candidates/sec: "
+          + "  ".join(f"{k}={v:.1f}" for k, v in batched_cps.items()))
     return out
 
 

@@ -16,7 +16,7 @@ from typing import Dict, Optional, Tuple
 
 from repro.core import components as C
 from repro.core.design_space import WSCDesign
-from repro.core.evaluator import EvalResult, evaluate_design
+from repro.core.evaluator import EvalResult, Fidelity, evaluate_design
 from repro.core.workload import BYTES, LLMWorkload
 
 H100_AREA_MM2 = 814.0
@@ -94,7 +94,9 @@ DOJO_LIKE = WSCDesign(
 
 
 def wsc_baseline_eval(design: WSCDesign, wl: LLMWorkload,
-                      fidelity: str = "analytical",
+                      fidelity: Fidelity = "analytical",
                       gnn_params: Optional[Dict] = None) -> EvalResult:
+    """Evaluate a published-architecture-like design point through the same
+    engine (and fidelity backend registry) as the explored candidates."""
     return evaluate_design(design, wl, fidelity=fidelity,
                            gnn_params=gnn_params)

@@ -171,6 +171,103 @@ def compile_chunk(design: WSCDesign, wl: LLMWorkload, tp: int,
 
 
 # ---------------------------------------------------------------------------
+# row-all-gather transfer pattern (DESIGN.md §4b) — the design-independent
+# structure of the transfers `compile_chunk` emits on a (gh, gw) grid:
+# pair list, per-source injection sequence, link set and per-pair routes.
+# The batched gnn/sim fidelity backends featurize/simulate from these tables
+# instead of materializing ChunkGraph objects; `featurize_transfer` /
+# `packets_for_transfer` remain the scalar reference the tables are tested
+# against.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RowAllGatherPattern:
+    gh: int
+    gw: int
+    n_cores: int
+    src: np.ndarray          # (P,) producer core per pair, compile order
+    dst: np.ndarray          # (P,)
+    seq: np.ndarray          # (P,) per-source injection sequence number
+    links: np.ndarray        # (E, 2) directed links, sorted lexicographically
+    senders: np.ndarray      # (E,) int32 — links[:, 0]
+    receivers: np.ndarray    # (E,) int32 — links[:, 1]
+    flows: np.ndarray        # (E,) float64 — pair routes crossing each link
+    out_deg: np.ndarray      # (n_cores,) float64
+    in_deg: np.ndarray       # (n_cores,) float64
+    route_eids: np.ndarray   # (P, Lmax) int32 link ids per hop, pad = E
+    route_len: np.ndarray    # (P,) int32
+
+
+_PATTERN_CACHE: Dict[Tuple[int, int], RowAllGatherPattern] = {}
+
+
+def row_allgather_pattern(gh: int, gw: int) -> RowAllGatherPattern:
+    """Memoized transfer structure of one `compile_chunk` inter-op edge on a
+    (gh, gw) grid. Pair / sequence order matches `compile_chunk`'s loops and
+    `packets_for_transfer`'s per-source numbering exactly; link order matches
+    `featurize_transfer`'s `sorted(link_flits)`."""
+    key = (int(gh), int(gw))
+    hit = _PATTERN_CACHE.get(key)
+    if hit is not None:
+        return hit
+    gh, gw = key
+    W = gw
+    n_cores = gh * gw
+    srcs: List[int] = []
+    dsts: List[int] = []
+    seqs: List[int] = []
+    routes: List[List[Tuple[int, int]]] = []
+    link_flows: Dict[Tuple[int, int], float] = {}
+    if gw > 1:
+        for a in range(gh):
+            for b in range(gw):
+                src = a * W + b
+                seq = 0
+                for b2 in range(gw):
+                    if b2 == b:
+                        continue
+                    dst = a * W + b2
+                    hops = _xy_route(src, dst, W)
+                    srcs.append(src)
+                    dsts.append(dst)
+                    seqs.append(seq)
+                    seq += 1
+                    routes.append(hops)
+                    for hop in hops:
+                        link_flows[hop] = link_flows.get(hop, 0.0) + 1.0
+    links = sorted(link_flows)
+    eid = {l: i for i, l in enumerate(links)}
+    E = len(links)
+    out_deg = np.zeros(n_cores)
+    in_deg = np.zeros(n_cores)
+    for u, v in links:
+        out_deg[u] += 1
+        in_deg[v] += 1
+    lmax = max((len(r) for r in routes), default=0)
+    route_eids = np.full((len(routes), max(lmax, 1)), E, np.int32)
+    route_len = np.zeros(len(routes), np.int32)
+    for i, r in enumerate(routes):
+        route_len[i] = len(r)
+        for j, hop in enumerate(r):
+            route_eids[i, j] = eid[hop]
+    pat = RowAllGatherPattern(
+        gh=gh, gw=gw, n_cores=n_cores,
+        src=np.array(srcs, np.int32), dst=np.array(dsts, np.int32),
+        seq=np.array(seqs, np.int32),
+        links=np.array(links, np.int32).reshape(-1, 2),
+        senders=np.array([u for u, _ in links], np.int32),
+        receivers=np.array([v for _, v in links], np.int32),
+        flows=np.array([link_flows[l] for l in links], np.float64),
+        out_deg=out_deg, in_deg=in_deg,
+        route_eids=route_eids, route_len=route_len)
+    if len(_PATTERN_CACHE) > 256:
+        _PATTERN_CACHE.pop(next(iter(_PATTERN_CACHE)))
+    _PATTERN_CACHE[key] = pat
+    return pat
+
+
+# ---------------------------------------------------------------------------
 # parallel strategy enumeration (paper §VI-A last paragraph)
 # ---------------------------------------------------------------------------
 

@@ -2,73 +2,56 @@
 
 evaluate_design(design, workload, fidelity) walks tile -> op -> chunk level
 and searches the parallel-strategy space (TP x DP x PP x micro-batch),
-returning the best-throughput feasible (throughput, power) point.
+returning the best-throughput feasible (throughput, power) point. It is the
+scalar *reference* path: explicit ChunkGraphs, per-graph latency through the
+fidelity backend's `chunk_latency`.
 
-evaluate_design_batch(designs, workload, fidelity) is the batched backend
-(DESIGN.md §4): it flattens every design's strategy list onto one
-(design, strategy) candidate axis and scores all analytical-fidelity
-candidates in a single vectorized NumPy pass — no ChunkGraph objects, no
-per-candidate Python loops — then reduces to the per-design best feasible
-point. Non-analytical fidelities (GNN / simulator) need explicit graphs and
-fall back to the scalar path per design.
+evaluate_design_batch(designs, workload, fidelity) dispatches to the
+fidelity backend registry (repro.core.fidelity, DESIGN.md §4b): every
+registered fidelity — analytical closed form, padded-graph GNN, lockstep
+simulator — scores the whole flattened (design, strategy) candidate axis in
+one array pass. There is no scalar per-design fallback; an unknown fidelity
+raises with the registered list.
 
 Fidelities (paper §VII: f1 = analytical, f0 = GNN; CA-sim for validation):
     "analytical"  fast equivalent-bandwidth NoC model
     "gnn"         GNN congestion model (needs trained params)
-    "sim"         cycle-approximate NoC simulator (ground truth, slow)
+    "sim"         cycle-approximate NoC simulator (ground truth)
 
 All entry points share a cross-call eval cache keyed by
-(design, workload, fidelity, system size) so repeated explorer visits to the
-same point never recompile or re-evaluate (DESIGN.md §6).
+(design, workload, fidelity, system size, params version) so repeated
+explorer visits to the same point never recompile or re-evaluate
+(DESIGN.md §6).
 """
 from __future__ import annotations
 
-import dataclasses
+import itertools
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core import components as C
-from repro.core.chunk_eval import (
-    StepResult,
-    evaluate_step,
-    evaluate_step_batch,
-    step_result_at,
-)
+from repro.core.chunk_eval import evaluate_step
 from repro.core.compiler import (
     ChunkGraph,
-    Strategy,
     compile_chunk,
     enumerate_strategies,
-    feasible_strategy_arrays,
-    grid_for_batch,
     strategy_sort_key,
 )
 from repro.core.design_space import DesignBatch, WSCDesign
-from repro.core.noc_analytical import (
-    chunk_latency_cycles,
-    chunk_latency_cycles_closed,
-    row_allgather_byte_hops,
+from repro.core.fidelity import (
+    EvalResult,
+    FidelityBackend,
+    get_backend,
+    registered_backends,
 )
-from repro.core.noc_gnn import chunk_latency_cycles_gnn
-from repro.core.noc_sim import chunk_latency_cycles_sim
-from repro.core.tile_eval import evaluate_tile_batch
-from repro.core.workload import BYTES, LLMWorkload
+from repro.core.workload import LLMWorkload
 
 H100_AREA_MM2 = 814.0
 
 _strategy_order = strategy_sort_key        # kept name: search-order heuristic
 
-
-@dataclasses.dataclass
-class EvalResult:
-    throughput: float
-    power_w: float
-    strategy: Optional[Strategy]
-    step: Optional[StepResult]
-    n_wafers: int
-    feasible: bool
-    reason: str = ""
+Fidelity = Union[str, FidelityBackend]
 
 
 def wafers_for_budget(design: WSCDesign, wl: LLMWorkload) -> int:
@@ -77,6 +60,13 @@ def wafers_for_budget(design: WSCDesign, wl: LLMWorkload) -> int:
     of GPUs')."""
     total = wl.gpu_budget * H100_AREA_MM2
     return max(1, round(total / max(design.wafer_area_mm2(), 1.0)))
+
+
+def _wafers_for_budget_batch(geom: DesignBatch, wl: LLMWorkload) -> np.ndarray:
+    total = wl.gpu_budget * H100_AREA_MM2
+    return np.maximum(
+        1, np.round(total / np.maximum(geom.wafer_area_mm2, 1.0))
+    ).astype(np.int64)
 
 
 # ---------------------------------------------------------------------------
@@ -88,27 +78,40 @@ def wafers_for_budget(design: WSCDesign, wl: LLMWorkload) -> int:
 _EVAL_CACHE: Dict[Tuple, EvalResult] = {}
 _EVAL_CACHE_MAX = 100_000
 _CACHE_STATS = {"hits": 0, "misses": 0}
-_PINNED_PARAMS: Dict[int, object] = {}   # id -> params, kept alive so the
-                                         # id()-based cache key stays unique
-_PINNED_PARAMS_MAX = 16
+
+# GNN params are unhashable pytrees, so cache keys carry an explicit
+# monotonic version token per params object. The params are pinned (strong
+# ref) while tokenized, so a live object's id cannot be reused; once a pin
+# is evicted its token is *retired* — the counter never hands it out again —
+# so a new object reusing the freed id gets a fresh token and can never
+# alias the old object's cache entries (the failure mode of the previous
+# id()-keyed scheme).
+_PARAMS_TOKENS: Dict[int, Tuple[int, object]] = {}   # id -> (token, params)
+_PARAMS_TOKENS_MAX = 16
+_params_counter = itertools.count(1)
+
+
+def gnn_params_token(gnn_params) -> Optional[int]:
+    """Stable monotonic version token for a params pytree (None -> None).
+    A params object keeps its token for as long as it stays pinned; calling
+    this after mutating-and-replacing params (e.g. online calibration)
+    naturally yields a new token for the new object."""
+    if gnn_params is None:
+        return None
+    pid = id(gnn_params)
+    entry = _PARAMS_TOKENS.get(pid)
+    if entry is None:
+        if len(_PARAMS_TOKENS) >= _PARAMS_TOKENS_MAX:
+            _PARAMS_TOKENS.pop(next(iter(_PARAMS_TOKENS)))
+        entry = (next(_params_counter), gnn_params)
+        _PARAMS_TOKENS[pid] = entry
+    return entry[0]
 
 
 def _cache_key(design: WSCDesign, wl: LLMWorkload, fidelity: str,
                n_wafers: int, max_strategies: int, gnn_params) -> Tuple:
-    if gnn_params is None:
-        gid = None
-    else:
-        gid = id(gnn_params)
-        if gid not in _PINNED_PARAMS and \
-                len(_PINNED_PARAMS) >= _PINNED_PARAMS_MAX:
-            # unpinning frees the old params object, so its id may be
-            # reused — drop every cache entry keyed by it first
-            old = next(iter(_PINNED_PARAMS))
-            _PINNED_PARAMS.pop(old)
-            for k in [k for k in _EVAL_CACHE if k[-1] == old]:
-                _EVAL_CACHE.pop(k)
-        _PINNED_PARAMS.setdefault(gid, gnn_params)
-    return (design, wl, fidelity, n_wafers, max_strategies, gid)
+    return (design, wl, fidelity, n_wafers, max_strategies,
+            gnn_params_token(gnn_params))
 
 
 def _cache_put(key: Tuple, value: EvalResult) -> EvalResult:
@@ -120,7 +123,7 @@ def _cache_put(key: Tuple, value: EvalResult) -> EvalResult:
 
 def clear_eval_cache() -> None:
     _EVAL_CACHE.clear()
-    _PINNED_PARAMS.clear()
+    _PARAMS_TOKENS.clear()
     _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
 
 
@@ -129,17 +132,19 @@ def eval_cache_stats() -> Dict[str, int]:
 
 
 # ---------------------------------------------------------------------------
-# scalar reference path (graph-based; also the only path for gnn/sim)
+# scalar reference path (graph-based)
 # ---------------------------------------------------------------------------
 
 
 def evaluate_design(design: WSCDesign, wl: LLMWorkload,
-                    fidelity: str = "analytical",
+                    fidelity: Fidelity = "analytical",
                     gnn_params: Optional[Dict] = None,
                     n_wafers: Optional[int] = None,
                     max_strategies: int = 24) -> EvalResult:
+    backend = get_backend(fidelity)
     nw = n_wafers if n_wafers is not None else wafers_for_budget(design, wl)
-    key = _cache_key(design, wl, fidelity, nw, max_strategies, gnn_params)
+    key = _cache_key(design, wl, backend.name, nw, max_strategies,
+                     gnn_params)
     hit = _EVAL_CACHE.get(key)
     if hit is not None:
         _CACHE_STATS["hits"] += 1
@@ -159,12 +164,7 @@ def evaluate_design(design: WSCDesign, wl: LLMWorkload,
         if gkey not in graph_cache:
             graph = compile_chunk(design, wl, s.tp, mb_tokens,
                                   cores_per_chunk)
-            if fidelity == "sim":
-                lat = chunk_latency_cycles_sim(graph, design)
-            elif fidelity == "gnn" and gnn_params is not None:
-                lat = chunk_latency_cycles_gnn(gnn_params, graph, design)
-            else:
-                lat = chunk_latency_cycles(graph, design)
+            lat = backend.chunk_latency(graph, design, gnn_params)
             graph_cache[gkey] = (graph, lat)
         graph, lat = graph_cache[gkey]
         step = evaluate_step(design, wl, s, lat, graph, nw)
@@ -180,109 +180,23 @@ def evaluate_design(design: WSCDesign, wl: LLMWorkload,
 
 
 # ---------------------------------------------------------------------------
-# batched path (analytical fidelity; DESIGN.md §4)
+# batched path: registry dispatch (DESIGN.md §4/§4b)
 # ---------------------------------------------------------------------------
 
 
-def _wafers_for_budget_batch(geom: DesignBatch, wl: LLMWorkload) -> np.ndarray:
-    total = wl.gpu_budget * H100_AREA_MM2
-    return np.maximum(
-        1, np.round(total / np.maximum(geom.wafer_area_mm2, 1.0))
-    ).astype(np.int64)
-
-
-def _evaluate_batch_analytical(geom: DesignBatch, wl: LLMWorkload,
-                               nw: np.ndarray, max_strategies: int
-                               ) -> List[EvalResult]:
-    designs = geom.designs
-
-    # per-design strategy lists, flattened to one candidate axis
-    sram_total = geom.buffer_kb * 1024.0 * geom.total_cores * nw
-    dram_total = geom.dram_gb_per_reticle * 1e9 * geom.n_reticles * nw
-    strat_arrays = [
-        feasible_strategy_arrays(wl, int(geom.total_cores[i] * nw[i]),
-                                 float(sram_total[i] + dram_total[i]),
-                                 max_strategies)
-        for i in range(len(designs))
-    ]
-    counts = np.array([len(a) for a in strat_arrays], np.int64)
-    offsets = np.concatenate([[0], np.cumsum(counts)])
-    didx = np.repeat(np.arange(len(designs), dtype=np.int64), counts)
-    sa = np.concatenate(strat_arrays, axis=0)
-    tp, pp, dp, mb = sa[:, 0], sa[:, 1], sa[:, 2], sa[:, 3]
-
-    cg = geom.take(didx)                     # candidate-axis geometry
-    nw_c = nw[didx]
-    chunks = pp * dp
-    mb_count = mb if wl.phase == "train" else np.ones_like(mb)
-    mb_tokens = np.maximum(wl.tokens_per_step() // (dp * mb_count), 1)
-    cores_per_chunk = np.maximum(cg.total_cores * nw_c // chunks, 1)
-
-    # tile stage: per-core tiles sized by the true chunk grid, NoC graph on
-    # the capped representative grid (compile_chunk's scale reduction)
-    gh_t, gw_t = grid_for_batch(cores_per_chunk)
-    gh, gw = grid_for_batch(np.minimum(cores_per_chunk, 64))
-    n_cores = gh * gw
-    ops = wl.layer_ops_batch(tp, mb_tokens)
-    tile_M = np.maximum(ops["M"] // gh_t, 1)
-    tile_N = np.maximum(ops["N"] // gw_t, 1)
-    tiles = evaluate_tile_batch(tile_M, ops["K"], tile_N,
-                                cg.mac[None, :], cg.buffer_kb[None, :],
-                                cg.buffer_bw[None, :],
-                                cg.dataflow_code[None, :])
-
-    # NoC stage: closed-form row-all-gather congestion on the capped grid
-    out_bytes = (ops["M"] * ops["N"]).astype(np.float64) * BYTES
-    lat = chunk_latency_cycles_closed(tiles["cycles"], out_bytes, gh, gw,
-                                      cg.noc_bw)
-    sram_bits_layer = (tiles["sram_read_bits"]
-                       + tiles["sram_write_bits"]).sum(axis=0) * n_cores
-    noc_bytes_layer = row_allgather_byte_hops(out_bytes[:-1], gh, gw)
-
-    step = evaluate_step_batch(cg, wl, tp, pp, dp, mb, lat, sram_bits_layer,
-                               noc_bytes_layer, nw_c)
-
-    # reduce: per-design best feasible throughput (first max wins, matching
-    # the scalar search order — candidates are already strategy-sorted)
-    results: List[EvalResult] = []
-    thpt = np.where(step["feasible"], step["throughput"], -1.0)
-    for i in range(len(designs)):
-        lo, hi = offsets[i], offsets[i + 1]
-        if hi == lo or not step["feasible"][lo:hi].any():
-            results.append(EvalResult(0.0, float("inf"), None, None,
-                                      int(nw[i]), False,
-                                      "no_feasible_strategy"))
-            continue
-        j = lo + int(np.argmax(thpt[lo:hi]))
-        sr = step_result_at(step, j)
-        results.append(EvalResult(
-            sr.throughput, sr.power_w,
-            Strategy(int(tp[j]), int(pp[j]), int(dp[j]), int(mb[j])),
-            sr, int(nw[i]), True))
-    return results
-
-
 def evaluate_design_batch(designs: Sequence[WSCDesign], wl: LLMWorkload,
-                          fidelity: str = "analytical",
+                          fidelity: Fidelity = "analytical",
                           gnn_params: Optional[Dict] = None,
                           n_wafers: Optional[Union[int, np.ndarray]] = None,
                           max_strategies: int = 24) -> List[EvalResult]:
-    """Evaluate N designs at once. Analytical fidelity runs the vectorized
-    pipeline over the flattened (design, strategy) candidate axis; other
-    fidelities evaluate per design (both share the cross-call cache)."""
+    """Evaluate N designs at once through the fidelity backend registry:
+    every fidelity runs its vectorized pipeline over the flattened
+    (design, strategy) candidate axis. Cache hits are filtered out first;
+    only the misses reach the backend."""
+    backend = get_backend(fidelity)
     designs = list(designs)
     if not designs:
         return []
-    if fidelity != "analytical":
-        if n_wafers is None:
-            nws: List[Optional[int]] = [None] * len(designs)
-        else:
-            nws = [int(v) for v in np.broadcast_to(
-                np.asarray(n_wafers, np.int64), (len(designs),))]
-        return [evaluate_design(d, wl, fidelity=fidelity,
-                                gnn_params=gnn_params, n_wafers=nws[i],
-                                max_strategies=max_strategies)
-                for i, d in enumerate(designs)]
 
     geom0 = DesignBatch.from_designs(designs)
     if n_wafers is None:
@@ -291,22 +205,23 @@ def evaluate_design_batch(designs: Sequence[WSCDesign], wl: LLMWorkload,
         nw = np.broadcast_to(np.asarray(n_wafers, np.int64),
                              (len(designs),)).copy()
 
-    keys = [_cache_key(d, wl, fidelity, int(nw[i]), max_strategies, None)
+    keys = [_cache_key(d, wl, backend.name, int(nw[i]), max_strategies,
+                       gnn_params)
             for i, d in enumerate(designs)]
     results: List[Optional[EvalResult]] = [_EVAL_CACHE.get(k) for k in keys]
     todo = [i for i, r in enumerate(results) if r is None]
     _CACHE_STATS["hits"] += len(designs) - len(todo)
     _CACHE_STATS["misses"] += len(todo)
     if todo:
-        fresh = _evaluate_batch_analytical(geom0.take(np.asarray(todo)), wl,
-                                           nw[todo], max_strategies)
+        fresh = backend.evaluate_batch(geom0.take(np.asarray(todo)), wl,
+                                       nw[todo], max_strategies, gnn_params)
         for i, r in zip(todo, fresh):
             results[i] = _cache_put(keys[i], r)
     return results            # type: ignore[return-value]
 
 
 def evaluate_objectives(design: WSCDesign, wl: LLMWorkload,
-                        fidelity: str = "analytical",
+                        fidelity: Fidelity = "analytical",
                         gnn_params: Optional[Dict] = None
                         ) -> Tuple[float, float]:
     """(throughput, power) pair for the explorer; infeasible -> (0, peak)."""
@@ -317,7 +232,7 @@ def evaluate_objectives(design: WSCDesign, wl: LLMWorkload,
 
 
 def evaluate_objectives_batch(designs: Sequence[WSCDesign], wl: LLMWorkload,
-                              fidelity: str = "analytical",
+                              fidelity: Fidelity = "analytical",
                               gnn_params: Optional[Dict] = None
                               ) -> List[Tuple[float, float]]:
     out = []
@@ -330,17 +245,28 @@ def evaluate_objectives_batch(designs: Sequence[WSCDesign], wl: LLMWorkload,
     return out
 
 
-def batched_objectives(wl: LLMWorkload, fidelity: str = "analytical",
+def batched_objectives(wl: LLMWorkload, fidelity: Fidelity = "analytical",
                        gnn_params: Optional[Dict] = None):
     """Batch-aware objective function for the explorer: call with a list of
     designs, get a list of (throughput, power). The `.batched` marker lets
-    run_mfmobo/run_mobo evaluate whole proposals in one vectorized pass."""
+    run_mfmobo/run_mobo evaluate whole proposals in one vectorized pass.
+    `fidelity` may be a registered name or a FidelityBackend instance."""
+    backend = get_backend(fidelity)
+
     def f(designs):
         if isinstance(designs, WSCDesign):
-            return evaluate_objectives(designs, wl, fidelity=fidelity,
+            return evaluate_objectives(designs, wl, fidelity=backend,
                                        gnn_params=gnn_params)
-        return evaluate_objectives_batch(designs, wl, fidelity=fidelity,
+        return evaluate_objectives_batch(designs, wl, fidelity=backend,
                                          gnn_params=gnn_params)
     f.batched = True
-    f.fidelity = fidelity
+    f.fidelity = backend.name
     return f
+
+
+__all__ = [
+    "EvalResult", "Fidelity", "batched_objectives", "clear_eval_cache",
+    "eval_cache_stats", "evaluate_design", "evaluate_design_batch",
+    "evaluate_objectives", "evaluate_objectives_batch", "get_backend",
+    "gnn_params_token", "registered_backends", "wafers_for_budget",
+]

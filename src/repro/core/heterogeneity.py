@@ -19,7 +19,7 @@ from typing import Dict, Optional, Tuple
 
 from repro.core import components as C
 from repro.core.design_space import WSCDesign
-from repro.core.evaluator import evaluate_design
+from repro.core.evaluator import Fidelity, evaluate_design, get_backend
 from repro.core.workload import LLMWorkload, inference_workload
 
 
@@ -49,11 +49,13 @@ def _kv_transfer_bw(design: WSCDesign, granularity: str) -> float:
 def evaluate_hetero(design_prefill: WSCDesign, design_decode: WSCDesign,
                     wl_base: LLMWorkload, granularity: str,
                     prefill_ratio: float, out_tokens: int = 2048,
-                    n_wafers: int = 1, fidelity: str = "analytical",
+                    n_wafers: int = 1, fidelity: Fidelity = "analytical",
                     gnn_params: Optional[Dict] = None) -> HeteroResult:
     """Evaluate a prefill/decode split. At core/reticle granularity both
     stages share the wafer (resource fractions); at wafer granularity each
-    stage gets whole wafers."""
+    stage gets whole wafers. `fidelity` is a registered backend name (or a
+    FidelityBackend instance) — resolved up front so typos fail loudly."""
+    fidelity = get_backend(fidelity)
     wl_p = inference_workload(wl_base, "prefill", batch=wl_base.batch,
                               seq=wl_base.seq)
     wl_d = inference_workload(wl_base, "decode", batch=wl_base.batch,

@@ -120,26 +120,45 @@ def _acquire(models: Tuple[GP, GP], cand_x: np.ndarray,
     return _acquire_batch(models, cand_x, evaluated, ref, q=1)[0]
 
 
-def _obj_space(ys: List[Tuple[float, float]]) -> np.ndarray:
+def obj_space(ys: List[Tuple[float, float]]) -> np.ndarray:
     """(log throughput, -log power) — the space GPs and HV operate in."""
     t = np.log1p(np.maximum(np.array([y[0] for y in ys]), 0.0))
     p = -np.log(np.maximum(np.array([y[1] for y in ys]), 1.0))
     return np.stack([t, p], 1)
 
 
-def _hv_ref(peak_power: float) -> np.ndarray:
+def hv_ref(peak_power: float) -> np.ndarray:
+    """Hypervolume reference point (throughput 0, peak power)."""
     return np.array([0.0, -np.log(max(peak_power, 1.0))])
+
+
+# legacy underscore aliases (pre-existing tests import these)
+_obj_space = obj_space
+_hv_ref = hv_ref
 
 
 def run_mfmobo(f0: EvalFn, f1: EvalFn, *, d0: int = 3, d1: int = 3,
                k: int = 5, N0: int = 20, N1: int = 30,
                peak_power: float = 15000.0, n_candidates: int = 256,
-               q: int = 1, seed: int = 0) -> Trace:
+               q: int = 1, seed: int = 0,
+               on_handover: Optional[Callable[
+                   [List[WSCDesign], List[Tuple[float, float]]], None]] = None
+               ) -> Trace:
+    """Paper Algorithm 1 (+ q-batching, DESIGN.md §5). `on_handover`, if
+    given, fires once immediately before the FIRST f0 evaluation (the d0
+    prior batch), with every f1-evaluated design and its objectives — the
+    hook the online GNN calibration loop (calibration.py) uses to fine-tune
+    f0 on simulator traces from the current Pareto neighborhood, so every
+    recorded f0 objective (priors included — they seed the trace, the front
+    and M0's training set permanently) comes from calibrated params."""
     rng = np.random.default_rng(seed)
     ref = _hv_ref(peak_power)
     tr = Trace([], [], [], [], [])
 
     X0, Y0, X1, Y1 = [], [], [], []
+    hist_d: List[WSCDesign] = []          # every evaluated design (f1 + f0)
+    hist_y: List[Tuple[float, float]] = []
+    handover_fired = False
 
     def record(x, d, y):
         tr.xs.append(x)
@@ -155,10 +174,15 @@ def run_mfmobo(f0: EvalFn, f1: EvalFn, *, d0: int = 3, d1: int = 3,
     tr.n_evals += len(ys1)
     for x, d, y in zip(init_x[:d1], init_d[:d1], ys1):
         X1.append(x); Y1.append(y)
+        hist_d.append(d); hist_y.append(y)
+    if d0 > 0 and on_handover is not None:
+        handover_fired = True
+        on_handover(list(hist_d), list(hist_y))
     ys0 = _eval_many(f0, init_d[d1:d1 + d0])
     tr.n_evals += len(ys0)
     for x, d, y in zip(init_x[d1:d1 + d0], init_d[d1:d1 + d0], ys0):
         X0.append(x); Y0.append(y)
+        hist_d.append(d); hist_y.append(y)
         record(x, d, y)
 
     total = N0 + N1 - d0 - d1
@@ -166,6 +190,10 @@ def run_mfmobo(f0: EvalFn, f1: EvalFn, *, d0: int = 3, d1: int = 3,
     while done < total:
         use_f0 = done >= N1 - d1
         use_m0 = done >= N1 - d1 + k
+        if use_f0 and not handover_fired:
+            handover_fired = True
+            if on_handover is not None:
+                on_handover(list(hist_d), list(hist_y))
         # batch size: q, clipped to the remaining budget and to the next
         # fidelity-schedule boundary so every evaluation in the batch runs
         # at the fidelity the schedule assigns it
@@ -184,6 +212,7 @@ def run_mfmobo(f0: EvalFn, f1: EvalFn, *, d0: int = 3, d1: int = 3,
         ys = _eval_many(f0 if use_f0 else f1, batch_d)
         tr.n_evals += len(ys)
         for j, y in zip(js, ys):
+            hist_d.append(cand_d[j]); hist_y.append(y)
             if use_f0:
                 X0.append(cand_x[j]); Y0.append(y)
                 record(cand_x[j], cand_d[j], y)

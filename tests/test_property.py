@@ -144,6 +144,103 @@ def test_evaluate_design_batch_matches_scalar(seed, wl_kind):
         assert np.isclose(a.step.step_time_s, b.step.step_time_s, rtol=1e-6)
 
 
+@given(seed=st.integers(0, 10_000),
+       fidelity=st.sampled_from(["gnn", "sim"]))
+@settings(max_examples=8, deadline=None)
+def test_graph_fidelity_batch_matches_scalar(seed, fidelity):
+    """The pattern-space batched gnn/sim backends reproduce the scalar
+    graph-walking evaluator on random valid designs — same winning strategy,
+    objectives equal to float tolerance."""
+    from repro.core.design_space import decode
+    from repro.core.evaluator import (clear_eval_cache, evaluate_design,
+                                      evaluate_design_batch)
+    from repro.core.noc_gnn import init_gnn
+    from repro.core.validator import validate
+    from repro.core.workload import GPT_BENCHMARKS
+    from hypothesis import assume
+
+    rng = np.random.default_rng(seed)
+    r = validate(decode(rng.random(13)))
+    assume(r.ok)
+    d = r.design
+    wl = GPT_BENCHMARKS[0]
+    params = init_gnn(jax.random.PRNGKey(0)) if fidelity == "gnn" else None
+    clear_eval_cache()
+    a = evaluate_design(d, wl, fidelity=fidelity, gnn_params=params,
+                        max_strategies=4)
+    clear_eval_cache()
+    b = evaluate_design_batch([d], wl, fidelity=fidelity, gnn_params=params,
+                              max_strategies=4)[0]
+    assert a.feasible == b.feasible
+    assert a.n_wafers == b.n_wafers
+    if a.feasible:
+        assert a.strategy == b.strategy
+        assert np.isclose(a.throughput, b.throughput, rtol=1e-5)
+        assert np.isclose(a.power_w, b.power_w, rtol=1e-5)
+
+
+@given(seed=st.integers(0, 10_000), w=st.integers(2, 6),
+       n=st.integers(1, 24))
+@settings(**SETTINGS)
+def test_simulate_batch_matches_scalar_bitwise(seed, w, n):
+    """The lockstep multi-lane simulator is bit-identical to the scalar
+    event-ordered simulator on random packet sets (small grids)."""
+    from repro.core.noc_sim import Packet, simulate, simulate_many
+
+    rng = np.random.default_rng(seed)
+    pkts = [Packet(src=int(rng.integers(0, w * w)),
+                   dst=int(rng.integers(0, w * w)),
+                   flits=int(rng.integers(1, 12)),
+                   inject=float(rng.integers(0, 6)))
+            for _ in range(n)]
+    ref = simulate(pkts, w)
+    got = simulate_many([pkts], [w])[0]
+    assert got.makespan == ref.makespan
+    assert got.avg_latency == ref.avg_latency
+    assert got.link_wait == ref.link_wait
+    assert got.link_util == ref.link_util
+
+
+@given(seed=st.integers(0, 10_000), n_graphs=st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_gnn_forward_batch_matches_scalar_forward(seed, n_graphs):
+    """Padded vmapped forward == per-graph forward on heterogeneous graphs
+    (masked segment sums make the padding inert)."""
+    from repro.core.noc_gnn import (gnn_forward, gnn_forward_batch, init_gnn,
+                                    pad_link_graphs)
+    from repro.core.compiler import compile_chunk
+    from repro.core.design_space import decode
+    from repro.core.noc_gnn import featurize_transfer
+    from repro.core.validator import validate
+    from repro.core.workload import GPT_BENCHMARKS
+    from hypothesis import assume
+
+    rng = np.random.default_rng(seed)
+    r = validate(decode(rng.random(13)))
+    assume(r.ok)
+    d = r.design
+    wl = GPT_BENCHMARKS[0]
+    graphs = []
+    for cores in rng.choice([4, 8, 16, 32, 64], size=n_graphs):
+        g = compile_chunk(d, wl, tp=16, mb_tokens=1024,
+                          cores_per_chunk=int(cores))
+        for t in range(len(g.transfers)):
+            if g.transfers[t].pairs:
+                graphs.append(featurize_transfer(g, d, t))
+                break
+    assume(graphs)
+    params = init_gnn(jax.random.PRNGKey(1))
+    batch = pad_link_graphs(graphs)
+    out = gnn_forward_batch(params, batch)
+    for i, g in enumerate(graphs):
+        ref = np.asarray(gnn_forward(
+            jax.tree.map(jnp.asarray, params), jnp.asarray(g.node_x),
+            jnp.asarray(g.edge_x), jnp.asarray(g.senders),
+            jnp.asarray(g.receivers), int(g.n_nodes)))
+        np.testing.assert_allclose(out[i, :len(g.links)], ref,
+                                   rtol=1e-5, atol=1e-5)
+
+
 @given(seed=st.integers(0, 10_000))
 @settings(**SETTINGS)
 def test_qehvi_q1_matches_scalar_ehvi_argmax(seed):

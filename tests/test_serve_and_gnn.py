@@ -85,7 +85,7 @@ def test_gnn_learns_waiting_times():
                 data.append(featurize_transfer(g, d, t, with_target=True))
     train, held = data[:-2], data[-2:]
     p0 = init_gnn(jax.random.PRNGKey(0))
-    p1, losses = train_gnn(p0, train, epochs=30)
+    p1, hist = train_gnn(p0, train, epochs=30)
 
     def err(params, graphs):
         tot = 0.0
@@ -95,7 +95,7 @@ def test_gnn_learns_waiting_times():
                 g.senders, g.receivers, g.n_nodes))
             tot += float(np.mean((np.log1p(pred) - np.log1p(g.target)) ** 2))
         return tot
-    assert losses[-1] < losses[0]
+    assert hist.train_loss[-1] < hist.train_loss[0]
     # must fit the training distribution; held-out should not blow up
     assert err(p1, train) < err(p0, train)
     assert err(p1, held) < err(p0, held) * 1.25
