@@ -17,8 +17,8 @@ import sys
 import time
 import traceback
 
-BENCHES = ("fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
-           "roofline")
+BENCHES = ("fig7", "fig8", "fig9", "fig10", "fig11", "fig11b", "fig12",
+           "fig13", "roofline")
 
 _MODULES = {
     "fig7": "benchmarks.fig7_eval_models",
@@ -26,6 +26,7 @@ _MODULES = {
     "fig9": "benchmarks.fig9_core_granularity",
     "fig10": "benchmarks.fig10_reticle_granularity",
     "fig11": "benchmarks.fig11_inference",
+    "fig11b": "benchmarks.fig11b_serving",
     "fig12": "benchmarks.fig12_heterogeneity",
     "fig13": "benchmarks.fig13_dse",
     "roofline": "benchmarks.roofline_table",
@@ -35,7 +36,9 @@ _MODULES = {
 _TRACKED_KEYS = ("candidates_per_sec", "n_evaluations", "wall_s", "q",
                  "convergence_speedup_vs_mobo", "hv_improvement_at_equal_iters",
                  "hv_sim_final", "calibration", "batched_candidates_per_sec",
-                 "n_points", "workload", "eval_cache")
+                 "n_points", "workload", "eval_cache",
+                 "serving_front", "goodput_best", "slo", "explorer",
+                 "hetero_serving")
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_dse.json")
@@ -111,11 +114,21 @@ def measure_batch_speedup(n_designs: int = 64, max_strategies: int = 24,
 
 
 def write_bench_json(records, quick: bool, speedup):
+    # merge into the existing file so an `--only` subset run refreshes its
+    # own records without wiping the other benchmarks' tracked history
+    merged = {}
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                merged = json.load(f).get("benchmarks", {})
+        except (json.JSONDecodeError, OSError):
+            merged = {}
+    merged.update(records)
     data = {
         "generated_unix_s": time.time(),
         "quick": quick,
         "batch_eval": speedup,
-        "benchmarks": records,
+        "benchmarks": merged,
     }
     with open(BENCH_JSON, "w") as f:
         json.dump(data, f, indent=1, default=float)
@@ -143,7 +156,7 @@ def main():
             mod = importlib.import_module(mod_name)
             result = mod.run(quick=args.quick)
             wall = time.time() - t0
-            rec = {"wall_s": wall, "status": "ok"}
+            rec = {"wall_s": wall, "status": "ok", "quick": args.quick}
             if isinstance(result, dict):
                 rec["metrics"] = {k: result[k] for k in _TRACKED_KEYS
                                   if k in result}
@@ -151,7 +164,8 @@ def main():
             print(f"[{name}] done in {wall:.0f}s", flush=True)
         except Exception:
             traceback.print_exc()
-            records[name] = {"wall_s": time.time() - t0, "status": "failed"}
+            records[name] = {"wall_s": time.time() - t0, "status": "failed",
+                             "quick": args.quick}
             failures.append(name)
 
     print(f"\n{'='*70}\nMeasuring batched-evaluator speedup (all fidelities)"

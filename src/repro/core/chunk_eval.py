@@ -37,7 +37,8 @@ def evaluate_step_batch(geom: DesignBatch, wl: LLMWorkload,
                         mb: np.ndarray, chunk_latency_cycles: np.ndarray,
                         sram_bits_layer: np.ndarray,
                         noc_bytes_layer: np.ndarray, n_wafers: np.ndarray,
-                        peak_power_w: Optional[float] = None
+                        peak_power_w: Optional[float] = None,
+                        legacy_dram_energy: bool = False
                         ) -> Dict[str, np.ndarray]:
     """Batched chunk-level model over C candidates.
 
@@ -84,9 +85,18 @@ def evaluate_step_batch(geom: DesignBatch, wl: LLMWorkload,
     sram_per_chunk = (geom.buffer_kb * 1024.0 * geom.total_cores * nw
                       / np.maximum(chunks, 1))
     w_bytes = p_bytes / np.maximum(pp, 1)
-    kv_bytes = (wl.kv_bytes_per_layer() * wl.n_layers / np.maximum(pp, 1)
-                if wl.phase == "decode" else 0.0)
-    spill = np.maximum(w_bytes + kv_bytes - sram_per_chunk, 0.0)
+    # KV-cache traffic per step (per chunk): a decode step streams the whole
+    # resident cache to score one new token per sequence and appends that
+    # token's K/V (per-token KV read + write); a prefill step writes the
+    # whole prompt's K/V once. Training keeps no cache.
+    kv_total = wl.kv_bytes_per_layer() * wl.n_layers / np.maximum(pp, 1)
+    if wl.phase == "decode":
+        kv_read, kv_write = kv_total, kv_total / max(wl.seq, 1)
+    elif wl.phase == "prefill":
+        kv_read, kv_write = 0.0, kv_total
+    else:
+        kv_read = kv_write = 0.0
+    spill = np.maximum(w_bytes + kv_read - sram_per_chunk, 0.0)
     reticles_per_chunk = np.maximum(
         geom.n_reticles * nw / np.maximum(chunks, 1), 1e-9)
     stacked_bw = geom.dram_bw_Bps_per_reticle * reticles_per_chunk
@@ -96,7 +106,12 @@ def evaluate_step_batch(geom: DesignBatch, wl: LLMWorkload,
         / np.maximum(chunks, 1)
     dram_bw = np.where(geom.dram_on, stacked_bw,
                        np.minimum(offchip_bw, transit))
-    dram_s = np.where(spill <= 0, 0.0, spill / np.maximum(dram_bw, 1.0))
+    # KV writes hit DRAM only when the cache cannot live in SRAM beside the
+    # weights (otherwise appends land in the on-wafer buffers)
+    kv_in_dram = (w_bytes + kv_total) > sram_per_chunk
+    dram_traffic = spill + np.where(kv_in_dram, kv_write, 0.0)
+    dram_s = np.where(dram_traffic <= 0, 0.0,
+                      dram_traffic / np.maximum(dram_bw, 1.0))
 
     stage_s = compute_s + tp_s + pp_s + dram_s
 
@@ -127,13 +142,19 @@ def evaluate_step_batch(geom: DesignBatch, wl: LLMWorkload,
                 * BYTES * 2 * wl.n_layers * mb_count * dp * bwd_mult)
     ir_bytes = ir_bytes + p_bytes * 2 * (dp > 1)
     e_ir = ir_bytes * 8 * geom.ir_energy_pj_per_bit * 1e-12
-    # NOTE: inherited model asymmetry — this capacity term sizes the SRAM
-    # pool per wafer (no nw factor) while the spill/latency term above
-    # includes nw; kept bit-identical to the pre-batching evaluator
-    dram_bytes = np.maximum(
-        p_bytes / np.maximum(pp, 1)
-        - geom.buffer_kb * 1024.0 * geom.total_cores / np.maximum(chunks, 1),
-        0.0) * mb_count * dp
+    # DRAM energy charges the same per-step traffic as the latency term
+    # above (SRAM pool sized per system — nw wafers — plus KV streaming).
+    # legacy_dram_energy=True reproduces the inherited asymmetric model
+    # bit-for-bit (capacity sized per wafer, no nw factor; KV ignored) so
+    # the pre-fix behavior stays testable.
+    if legacy_dram_energy:
+        dram_bytes = np.maximum(
+            p_bytes / np.maximum(pp, 1)
+            - geom.buffer_kb * 1024.0 * geom.total_cores
+            / np.maximum(chunks, 1),
+            0.0) * mb_count * dp
+    else:
+        dram_bytes = dram_traffic * mb_count * dp
     e_dram = dram_bytes * 8 * np.where(geom.dram_on, E.dram_bit,
                                        E.offchip_bit) * 1e-12
     static_w = geom.static_power_w * nw
@@ -202,8 +223,8 @@ def _geom_for(design: WSCDesign) -> DesignBatch:
 
 def evaluate_step(design: WSCDesign, wl: LLMWorkload, s: Strategy,
                   chunk_latency_cycles: float, graph: ChunkGraph,
-                  n_wafers: int, peak_power_w: Optional[float] = None
-                  ) -> StepResult:
+                  n_wafers: int, peak_power_w: Optional[float] = None,
+                  legacy_dram_energy: bool = False) -> StepResult:
     """Combine op-level chunk latency with chunk-level comm/DRAM/pipeline.
     Scalar wrapper over `evaluate_step_batch` (batch of one)."""
     geom = _geom_for(design)
@@ -214,5 +235,6 @@ def evaluate_step(design: WSCDesign, wl: LLMWorkload, s: Strategy,
         geom, wl, np.asarray([s.tp]), np.asarray([s.pp]), np.asarray([s.dp]),
         np.asarray([s.microbatches]), np.asarray([chunk_latency_cycles]),
         np.asarray([sram_bits_layer]), np.asarray([noc_bytes_layer]),
-        np.asarray([n_wafers]), peak_power_w)
+        np.asarray([n_wafers]), peak_power_w,
+        legacy_dram_energy=legacy_dram_energy)
     return step_result_at(out, 0)

@@ -245,6 +245,24 @@ def evaluate_objectives_batch(designs: Sequence[WSCDesign], wl: LLMWorkload,
     return out
 
 
+def evaluate_serving_batch(designs: Sequence[WSCDesign],
+                           wl_base: LLMWorkload, mix, slo, **kw):
+    """Request-level serving metrics (TTFT / TPOT / SLO goodput) for N
+    designs through the fidelity registry — the serving counterpart of
+    `evaluate_design_batch`. Thin forwarder to `repro.core.serving`
+    (imported lazily: serving composes this module's batched per-step
+    evaluations, so a top-level import would be circular)."""
+    from repro.core import serving
+    return serving.evaluate_serving_batch(designs, wl_base, mix, slo, **kw)
+
+
+def serving_objectives(wl_base: LLMWorkload, mix, slo, **kw):
+    """Batch-aware (SLO goodput, power) explorer objective — forwarder to
+    `repro.core.serving.serving_objectives` (lazy import, see above)."""
+    from repro.core import serving
+    return serving.serving_objectives(wl_base, mix, slo, **kw)
+
+
 def batched_objectives(wl: LLMWorkload, fidelity: Fidelity = "analytical",
                        gnn_params: Optional[Dict] = None):
     """Batch-aware objective function for the explorer: call with a list of
@@ -267,6 +285,7 @@ def batched_objectives(wl: LLMWorkload, fidelity: Fidelity = "analytical",
 __all__ = [
     "EvalResult", "Fidelity", "batched_objectives", "clear_eval_cache",
     "eval_cache_stats", "evaluate_design", "evaluate_design_batch",
-    "evaluate_objectives", "evaluate_objectives_batch", "get_backend",
-    "gnn_params_token", "registered_backends", "wafers_for_budget",
+    "evaluate_objectives", "evaluate_objectives_batch",
+    "evaluate_serving_batch", "get_backend", "gnn_params_token",
+    "registered_backends", "serving_objectives", "wafers_for_budget",
 ]

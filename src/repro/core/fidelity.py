@@ -453,3 +453,12 @@ class SimBackend:
 register_backend(AnalyticalBackend())
 register_backend(GNNBackend())
 register_backend(SimBackend())
+
+
+def evaluate_serving_batch(designs, wl, mix, slo, **kw):
+    """Request-level serving evaluation (TTFT / TPOT / SLO goodput) against
+    any registered backend — every fidelity that can score per-step
+    prefill/decode workloads can score a serving workload. Forwarder to
+    `repro.core.serving` (lazy import: serving builds on this registry)."""
+    from repro.core.serving import evaluate_serving_batch as _impl
+    return _impl(designs, wl, mix, slo, **kw)

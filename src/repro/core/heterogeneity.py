@@ -8,18 +8,32 @@ KV-cache transfer between stages costs:
     reticle  different reticles, one wafer          -> inter-reticle links
     wafer    different wafers                       -> inter-wafer NIs
 
-Overall throughput = matched-rate pipeline of the two stages including the
-KV transfer; each stage's design can tune its stacking-DRAM bandwidth
-independently (reticle/wafer granularity) per the paper.
+`evaluate_hetero` scores the split as a matched-rate pipeline of the two
+stages including the KV transfer (the paper's model); each stage's design
+can tune its stacking-DRAM bandwidth independently (reticle/wafer
+granularity). `evaluate_hetero_serving` re-scores the same disaggregation
+with the coupled request-level model (repro.core.serving): prefills run on
+their own stage so decode never stalls, but each request's admission to the
+decode pool is gated by its prefill completion plus the KV-cache transfer —
+so TTFT/TPOT/SLO goodput are first-class instead of rate-matched stage
+throughputs.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, Optional, Tuple
 
+import numpy as np
+
 from repro.core import components as C
 from repro.core.design_space import WSCDesign
 from repro.core.evaluator import Fidelity, evaluate_design, get_backend
+from repro.core.serving import (
+    RequestMix,
+    ServingSLO,
+    disaggregated_metrics,
+    serving_workloads,
+)
 from repro.core.workload import LLMWorkload, inference_workload
 
 
@@ -31,6 +45,20 @@ class HeteroResult:
     decode_tps: float
     kv_transfer_s: float
     granularity: str
+
+
+def wafer_split(n_wafers: int, prefill_ratio: float) -> Tuple[int, int]:
+    """Wafer-granularity resource split with the area budget respected:
+    nw_p + nw_d == n_wafers always. (The old `max(1, n_wafers - nw_p)`
+    fallback let the two stages claim n_wafers + 1 wafers at extreme
+    prefill ratios — silently granting extra silicon vs the area-matched
+    budget.) Each stage needs at least one whole wafer."""
+    if n_wafers < 2:
+        raise ValueError(
+            "wafer-granularity heterogeneity needs n_wafers >= 2 "
+            f"(got {n_wafers}); use core/reticle granularity instead")
+    nw_p = min(max(1, round(n_wafers * prefill_ratio)), n_wafers - 1)
+    return nw_p, n_wafers - nw_p
 
 
 def _kv_transfer_bw(design: WSCDesign, granularity: str) -> float:
@@ -62,8 +90,7 @@ def evaluate_hetero(design_prefill: WSCDesign, design_decode: WSCDesign,
                               seq=wl_base.seq)
 
     if granularity == "wafer":
-        nw_p = max(1, round(n_wafers * prefill_ratio))
-        nw_d = max(1, n_wafers - nw_p)
+        nw_p, nw_d = wafer_split(n_wafers, prefill_ratio)
         rp = evaluate_design(design_prefill, wl_p, fidelity, gnn_params,
                              n_wafers=nw_p)
         rd = evaluate_design(design_decode, wl_d, fidelity, gnn_params,
@@ -100,4 +127,94 @@ def evaluate_hetero(design_prefill: WSCDesign, design_decode: WSCDesign,
         prefill_tps=rp.throughput * scale_p,
         decode_tps=decode_tokens_s,
         kv_transfer_s=kv_s_per_prompt,
+        granularity=granularity)
+
+
+# ---------------------------------------------------------------------------
+# coupled request-level re-score (ISSUE 4 tentpole)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class HeteroServingResult:
+    feasible: bool
+    goodput_tok_s: float
+    throughput_tok_s: float
+    ttft_s: float                  # mean over the mix's requests
+    tpot_s: float
+    slo_attainment: float
+    power_w: float
+    kv_transfer_s: float           # mean per-request stage transfer
+    n_decode_steps: int
+    granularity: str
+    reason: str = ""
+
+
+def evaluate_hetero_serving(design_prefill: WSCDesign,
+                            design_decode: WSCDesign,
+                            wl_base: LLMWorkload, granularity: str,
+                            prefill_ratio: float, mix: RequestMix,
+                            slo: ServingSLO, slots: int = 8,
+                            n_wafers: int = 1,
+                            fidelity: Fidelity = "analytical",
+                            gnn_params: Optional[Dict] = None
+                            ) -> HeteroServingResult:
+    """Re-score a prefill/decode disaggregation with the coupled request
+    model instead of independent rate-matched stage throughputs: per-request
+    prefill times on the prefill stage's resource share, per-request
+    KV-cache shipping across the stage boundary, and a decode pool that only
+    admits a request once its KV has landed and a slot is free."""
+    fidelity = get_backend(fidelity)
+    wl_p, wl_d, p_ref = serving_workloads(wl_base, mix, slots)
+
+    if granularity == "wafer":
+        nw_p, nw_d = wafer_split(n_wafers, prefill_ratio)
+        rp = evaluate_design(design_prefill, wl_p, fidelity, gnn_params,
+                             n_wafers=nw_p)
+        rd = evaluate_design(design_decode, wl_d, fidelity, gnn_params,
+                             n_wafers=nw_d)
+        scale_p = scale_d = 1.0
+    else:
+        rp = evaluate_design(design_prefill, wl_p, fidelity, gnn_params,
+                             n_wafers=n_wafers)
+        rd = evaluate_design(design_decode, wl_d, fidelity, gnn_params,
+                             n_wafers=n_wafers)
+        scale_p, scale_d = prefill_ratio, 1.0 - prefill_ratio
+    if not (rp.feasible and rd.feasible):
+        return HeteroServingResult(
+            feasible=False, goodput_tok_s=0.0, throughput_tok_s=0.0,
+            ttft_s=float("inf"), tpot_s=float("inf"), slo_attainment=0.0,
+            power_w=float("inf"), kv_transfer_s=float("inf"),
+            n_decode_steps=0, granularity=granularity,
+            reason="prefill_infeasible" if not rp.feasible
+            else "decode_infeasible")
+
+    # stage step times on the stage's actual resource share; core-level
+    # scheduling flexibility costs control overhead (paper §IX-E), modeled
+    # as time inflation rather than a rate discount
+    eff = {"core": 0.92, "reticle": 1.0, "wafer": 1.0}[granularity]
+    t_p_ref = rp.step.step_time_s / max(scale_p, 1e-9) / eff
+    t_d = rd.step.step_time_s / max(scale_d, 1e-9) / eff
+
+    plens = np.asarray(mix.prompt_lens, np.float64)
+    t_prefill = t_p_ref * plens / max(p_ref, 1)
+    # per-request K+V cache: the canonical per-layer formula, rescaled from
+    # the workload's (batch, seq) footprint to one prompt of plens tokens
+    kv_per_token = (wl_base.kv_bytes_per_layer() * wl_base.n_layers
+                    / max(wl_base.batch * wl_base.seq, 1))
+    kv_bytes = kv_per_token * plens
+    bw = _kv_transfer_bw(design_decode, granularity)
+    kv_s = kv_bytes / max(bw, 1.0)
+
+    m = disaggregated_metrics(mix, slo, slots, t_prefill, kv_s, t_d)
+    power = rp.power_w * scale_p + rd.power_w * scale_d
+    return HeteroServingResult(
+        feasible=True,
+        goodput_tok_s=m["goodput_tok_s"],
+        throughput_tok_s=m["throughput_tok_s"],
+        ttft_s=m["ttft_s"], tpot_s=m["tpot_s"],
+        slo_attainment=m["slo_attainment"],
+        power_w=power,
+        kv_transfer_s=float(np.mean(kv_s)),
+        n_decode_steps=m["n_decode_steps"],
         granularity=granularity)

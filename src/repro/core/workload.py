@@ -73,7 +73,12 @@ class LLMWorkload:
         D, F = self.d_model, self.d_ff
         hd = D // max(self.n_heads, 1)
         M = mb_tokens if mb_tokens is not None else self.tokens_per_step()
-        kv_len = self.seq if self.phase == "decode" else M // self.batch
+        # Attention context length is the full sequence in every phase:
+        # decode reads the whole KV cache, and a prefill/train token attends
+        # over its prompt no matter how the M tokens are sharded across
+        # dp/microbatch splits (M // batch would shrink the KV with the
+        # split, underestimating scores/attnv FLOPs and traffic).
+        kv_len = self.seq
         e = self.moe_topk if self.moe_experts else 1
         ops = [
             GEMMOp("qkv", M, D, (self.n_heads + 2 * self.n_kv) * hd // tp),
@@ -96,8 +101,7 @@ class LLMWorkload:
         M = np.asarray(mb_tokens, np.int64)
         D, F = self.d_model, self.d_ff
         hd = D // max(self.n_heads, 1)
-        kv_len = (np.full_like(M, self.seq) if self.phase == "decode"
-                  else M // self.batch)
+        kv_len = np.full_like(M, self.seq)   # full context in every phase
         e = self.moe_topk if self.moe_experts else 1
         heads_tp = np.maximum(self.n_heads // tp, 1)
         m_attn = M * heads_tp // max(self.n_heads, 1)
@@ -121,6 +125,69 @@ class LLMWorkload:
 
     def act_bytes_per_layer(self, mb_tokens: int) -> float:
         return mb_tokens * self.d_model * BYTES
+
+
+# ---------------------------------------------------------------------------
+# request-level serving descriptor (ISSUE 4 tentpole; consumed by
+# repro.core.serving) — one arrival batch of requests, each a prompt to
+# prefill and a number of tokens to decode under continuous batching.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestMix:
+    """Prompt/output length distribution for one serving arrival batch.
+
+    All requests arrive at t=0 in queue order (matching
+    `repro.serve.engine.ServeEngine.run`). Frozen + tuple fields so a mix is
+    hashable and can key caches alongside `LLMWorkload`.
+    """
+    prompt_lens: Tuple[int, ...]
+    out_lens: Tuple[int, ...]         # max_new_tokens per request
+
+    def __post_init__(self):
+        # coerce to tuples so list inputs keep the hashability contract
+        object.__setattr__(self, "prompt_lens", tuple(self.prompt_lens))
+        object.__setattr__(self, "out_lens", tuple(self.out_lens))
+        if len(self.prompt_lens) != len(self.out_lens):
+            raise ValueError("prompt_lens and out_lens must align")
+        if not self.prompt_lens:
+            raise ValueError("RequestMix needs at least one request")
+        if min(self.prompt_lens) < 1 or min(self.out_lens) < 1:
+            raise ValueError("prompt/output lengths must be >= 1")
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.prompt_lens)
+
+    @property
+    def mean_prompt(self) -> float:
+        return float(np.mean(self.prompt_lens))
+
+    @property
+    def mean_out(self) -> float:
+        return float(np.mean(self.out_lens))
+
+    def total_out_tokens(self) -> int:
+        return int(sum(self.out_lens))
+
+    def context_len(self) -> int:
+        """Representative mid-generation context (KV length) for sizing the
+        steady-state decode step: prompt plus half the generated tokens."""
+        return max(1, int(round(self.mean_prompt + 0.5 * self.mean_out)))
+
+    @classmethod
+    def uniform(cls, n_requests: int, prompt_len: int,
+                out_len: int) -> "RequestMix":
+        return cls((prompt_len,) * n_requests, (out_len,) * n_requests)
+
+    @classmethod
+    def sampled(cls, rng: np.random.Generator, n_requests: int,
+                prompt_range: Tuple[int, int],
+                out_range: Tuple[int, int]) -> "RequestMix":
+        p = rng.integers(prompt_range[0], prompt_range[1] + 1, n_requests)
+        o = rng.integers(out_range[0], out_range[1] + 1, n_requests)
+        return cls(tuple(int(x) for x in p), tuple(int(x) for x in o))
 
 
 # ---------------------------------------------------------------------------

@@ -97,7 +97,13 @@ class ServeEngine:
         pos = jnp.asarray(self.pos, jnp.int32)
         logits, self.cache = self._decode(self.params, tokens, pos, self.cache)
         self.rng, k = jax.random.split(self.rng)
-        nxt = np.asarray(sample_logits(logits, k))
+        # per-slot temperatures: empty slots decode greedily (discarded),
+        # live slots honor their request's setting for every decode step,
+        # not just the first token sampled at admission
+        temps = np.zeros(self.slots, np.float32)
+        for s in live:
+            temps[s] = self.active[s].temperature
+        nxt = np.asarray(sample_logits(logits, k, jnp.asarray(temps)))
         for s in live:
             req = self.active[s]
             tok = int(nxt[s])

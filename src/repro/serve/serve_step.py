@@ -35,10 +35,21 @@ def make_decode_step(cfg: ModelConfig, rt: Runtime) -> Callable:
     return decode_step
 
 
-def sample_logits(logits: jnp.ndarray, rng, temperature: float = 0.0
-                  ) -> jnp.ndarray:
-    """Greedy (T=0) or temperature sampling. logits (B, V) -> (B,) int32."""
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(
-        rng, logits.astype(jnp.float32) / temperature, axis=-1).astype(jnp.int32)
+def sample_logits(logits: jnp.ndarray, rng, temperature=0.0) -> jnp.ndarray:
+    """Greedy (T=0) or temperature sampling. logits (B, V) -> (B,) int32.
+
+    `temperature` is a scalar applied to every row, or a (B,) array of
+    per-row temperatures (the engine's per-request setting): rows with
+    T<=0 decode greedily, rows with T>0 sample categorically.
+    """
+    t = jnp.asarray(temperature, jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if t.ndim == 0:
+        if float(t) <= 0.0:
+            return greedy
+        return jax.random.categorical(
+            rng, logits.astype(jnp.float32) / t, axis=-1).astype(jnp.int32)
+    safe_t = jnp.maximum(t, 1e-6)[:, None]
+    sampled = jax.random.categorical(
+        rng, logits.astype(jnp.float32) / safe_t, axis=-1).astype(jnp.int32)
+    return jnp.where(t > 0.0, sampled, greedy)
