@@ -8,8 +8,10 @@ DESIGN.md §8) end to end:
   (1) a design sweep scored on (SLO goodput, power) — the serving Pareto
       front, with the SLO calibrated from the sampled designs' median
       TTFT/TPOT so it binds for roughly half the pool;
-  (2) an SLO-constrained MOBO exploration using `serving_objectives`
-      (batched q-EHVI proposals, each scored through the registry);
+  (2) an SLO-constrained MOBO exploration as a declarative serving
+      campaign (repro.explore, DESIGN.md §9): the calibrated SLO becomes
+      `ConstraintSpec`s on TTFT/TPOT, so violating candidates are mapped to
+      the penalty point and excluded from the front;
   (3) the heterogeneity re-score: the same prefill/decode disaggregation as
       Fig. 12, under the coupled request model instead of rate matching.
 
@@ -25,15 +27,37 @@ import numpy as np
 from benchmarks.common import sample_valid_designs, save_artifact
 from repro.core.design_space import WSCDesign
 from repro.core.heterogeneity import evaluate_hetero_serving
-from repro.core.mfmobo import run_mobo
 from repro.core.pareto import pareto_front, to_max_space
-from repro.core.serving import (
-    ServingSLO,
-    evaluate_serving_batch,
-    serving_objectives,
-)
+from repro.core.serving import ServingSLO, evaluate_serving_batch
 from repro.core.validator import validate
 from repro.core.workload import GPT_BENCHMARKS, RequestMix
+from repro.explore import (
+    Campaign,
+    CampaignSpec,
+    ConstraintSpec,
+    FidelitySchedule,
+    ServingSpec,
+)
+
+
+def explorer_spec(workload: str, mix: RequestMix, slo: ServingSLO,
+                  slots: int, quick: bool) -> CampaignSpec:
+    """The SLO-constrained exploration as a campaign: the probe-calibrated
+    SLO lands both in the goodput objective (via the serving spec) and as
+    hard TTFT/TPOT constraints."""
+    return CampaignSpec(
+        name="fig11b-serving-slo", workload=workload, scenario="serving",
+        strategy="mobo",
+        constraints=(ConstraintSpec("ttft", "<=", slo.ttft_s),
+                     ConstraintSpec("tpot", "<=", slo.tpot_s)),
+        fidelity=FidelitySchedule(f0="analytical", d0=4, k=0),
+        n_evals_f0=8 if quick else 20, q=4, seed=3,
+        max_strategies=8,
+        serving=ServingSpec(
+            n_requests=mix.n_requests,
+            prompt_len=int(mix.prompt_lens[0]),
+            out_len=int(mix.out_lens[0]), slots=slots,
+            ttft_s=slo.ttft_s, tpot_s=slo.tpot_s))
 
 
 def run(quick: bool = False) -> Dict:
@@ -68,9 +92,10 @@ def run(quick: bool = False) -> Dict:
     front = [{"goodput_tok_s": float(t), "power_w": float(-p)}
              for t, p in front_pts]
 
-    # ---- (2) SLO-constrained exploration -------------------------------
-    f_serve = serving_objectives(wl, mix, slo, slots=slots)
-    tr = run_mobo(f_serve, d0=4, N=8 if quick else 20, q=4, seed=3)
+    # ---- (2) SLO-constrained exploration (campaign) --------------------
+    spec = explorer_spec(wl.name, mix, slo, slots, quick)
+    res = Campaign(spec).run()
+    tr = res.trace
     explored_best = max((y[0] for y in tr.ys), default=0.0)
 
     # ---- (3) heterogeneity, coupled request model ----------------------
@@ -105,7 +130,14 @@ def run(quick: bool = False) -> Dict:
         "goodput_best": float(good.max()) if len(good) else 0.0,
         "explorer": {"n_evals": tr.n_evals, "hv_final":
                      tr.hv[-1] if tr.hv else 0.0,
-                     "goodput_best": explored_best},
+                     "goodput_best": explored_best,
+                     "campaign": spec.name,
+                     "candidates_per_sec": res.candidates_per_sec,
+                     "wall_s": res.wall_s,
+                     "n_constraint_violations":
+                     res.objective_stats["f0"]["n_constraint_violations"],
+                     "front_size": len(res.front)},
+        "stage_cache": res.stage_cache,
         "hetero_serving": hetero,
     }
     save_artifact("fig11b_serving", out)

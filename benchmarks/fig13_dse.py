@@ -4,11 +4,15 @@ headline comparison of searched Pareto-optimal WSCs vs the H100-like GPU
 cluster and WSE2-like / Dojo-like WSC baselines at matched total area.
 
 The scatter sweep runs through `evaluate_objectives_batch` (one vectorized
-pass over all sampled designs) and the MFMOBO refinement proposes q-point
-batches; candidates/sec is reported for the perf trajectory.
+pass over all sampled designs) and the MFMOBO refinement is a declarative
+campaign — the shipped `examples/campaigns/gpt175b_train_dse.json` spec,
+shrunk in quick mode — run through `repro.explore.Campaign`;
+candidates/sec is reported for the perf trajectory.
 """
 from __future__ import annotations
 
+import dataclasses
+import os
 import time
 from typing import Dict
 
@@ -16,20 +20,30 @@ import numpy as np
 
 from benchmarks.common import sample_valid_designs, save_artifact
 from repro.core.baselines import DOJO_LIKE, WSE2_LIKE, gpu_cluster_eval
-from repro.core.evaluator import (
-    batched_objectives,
-    evaluate_design,
-    evaluate_objectives_batch,
-)
-from repro.core.mfmobo import run_mfmobo
+from repro.core.evaluator import evaluate_design, evaluate_objectives_batch
 from repro.core.pareto import pareto_front, to_max_space
 from repro.core.validator import validate
 from repro.core.workload import GPT_BENCHMARKS, inference_workload
+from repro.explore import Campaign, CampaignSpec
+
+SPEC_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "examples", "campaigns",
+    "gpt175b_train_dse.json")
+
+
+def refinement_spec(quick: bool) -> CampaignSpec:
+    """The MFMOBO refinement campaign: the shipped example spec as-is, or a
+    CI-sized shrink of it (smaller workload + budget, same schedule)."""
+    spec = CampaignSpec.from_json(SPEC_PATH)
+    if quick:
+        spec = dataclasses.replace(
+            spec, name=spec.name + "-quick", workload=GPT_BENCHMARKS[1].name,
+            n_evals_f0=6, n_evals_f1=8, q=2)
+    return spec
 
 
 def run(quick: bool = False) -> Dict:
     wl = GPT_BENCHMARKS[1] if quick else GPT_BENCHMARKS[7]
-    f1 = batched_objectives(wl, "analytical")
 
     # explore (analytical fidelity for this scatter; fig8 shows MF behavior)
     n = 24 if quick else 80
@@ -41,10 +55,10 @@ def run(quick: bool = False) -> Dict:
             pts.append({"throughput": t, "power_w": p,
                         "stacked": d.use_stacked_dram,
                         "design": d.describe()})
-    # a short MFMOBO refinement to densify the front (q-point proposals)
-    tr = run_mfmobo(f1, f1, d0=2, d1=3, k=2, N0=6 if quick else 12,
-                    N1=8 if quick else 16, n_candidates=64, seed=3,
-                    q=2 if quick else 4)
+    # a short MFMOBO refinement campaign to densify the front
+    spec = refinement_spec(quick)
+    res = Campaign(spec).run()
+    tr = res.trace
     for d, y in zip(tr.designs, tr.ys):
         if y[0] > 0:
             pts.append({"throughput": y[0], "power_w": y[1],
@@ -93,6 +107,11 @@ def run(quick: bool = False) -> Dict:
         "n_evaluations": n_evals,
         "wall_s": wall_s,
         "candidates_per_sec": n_evals / max(wall_s, 1e-9),
+        "campaigns": {spec.name: {
+            "candidates_per_sec": res.candidates_per_sec,
+            "wall_s": res.wall_s, "n_evals": res.n_evals,
+            "hv_final": res.hv_final,
+            "stage_cache": res.stage_cache}},
         "pareto_stacked": stacked,
         "pareto_offchip": offchip,
         "baselines": base,

@@ -1,13 +1,14 @@
 """Fig. 8 reproduction: explorer efficiency — random search vs MOBO vs
-MFMOBO (hypervolume vs iteration, averaged over seeds). f1 = analytical,
-f0 = GNN-based evaluation, exactly as the paper runs its loop — but on the
-batched fidelity backends: proposals are acquired as q-point batches
-(greedy q-EHVI) and scored through `evaluate_design_batch`, with the
-cross-call eval cache deduplicating repeat visits. The MFMOBO run
-additionally calibrates the GNN online at the f1 -> f0 handover
-(calibration.GNNCalibrator): simulator traces from the current Pareto
-neighborhood fine-tune the pre-trained checkpoint before f0 spends the
-rest of the budget. Reports candidates/sec.
+MFMOBO (hypervolume vs iteration, averaged over seeds), expressed as
+declarative campaigns (repro.explore, DESIGN.md §9): each method/seed cell
+is a `CampaignSpec` — workload, strategy, fidelity schedule, budget — run
+through the `Campaign` runner. f1 = analytical, f0 = GNN-based evaluation,
+exactly as the paper runs its loop, on the batched fidelity backends with
+q-point greedy q-EHVI proposals and the cross-call eval cache. The MFMOBO
+campaign declares `calibrate_on_handover`: simulator traces from the
+current Pareto neighborhood fine-tune the pre-trained GNN checkpoint
+before f0 spends the rest of the budget. Reports candidates/sec and
+per-fidelity-stage cache hit-rates.
 """
 from __future__ import annotations
 
@@ -17,19 +18,43 @@ from typing import Dict
 import numpy as np
 
 from benchmarks.common import save_artifact, trained_gnn
-from repro.core.calibration import GNNCalibrator
-from repro.core.evaluator import (batched_objectives, eval_cache_stats,
-                                  evaluate_objectives_batch)
-from repro.core.mfmobo import hv_ref, obj_space, run_mfmobo, run_mobo, run_random
+from repro.core.evaluator import evaluate_objectives_batch
+from repro.core.mfmobo import hv_ref, obj_space
 from repro.core.pareto import hypervolume_2d
 from repro.core.workload import GPT_BENCHMARKS
+from repro.explore import Campaign, CampaignSpec, FidelitySchedule
+
+
+def method_specs(workload: str, seed: int, *, N0: int, N1: int, cand: int,
+                 q: int, quick: bool) -> Dict[str, CampaignSpec]:
+    """The three Fig. 8 method cells as campaign specs (same budgets and
+    seeds as the pre-campaign hand-wired loops)."""
+    gnn_f0 = FidelitySchedule(f1="analytical", f0="gnn", d1=3, d0=3, k=0)
+    return {
+        "random": CampaignSpec(
+            name=f"fig8-random-s{seed}", workload=workload,
+            scenario="train", strategy="random", fidelity=gnn_f0,
+            n_evals_f0=N0, q=N0, seed=seed),   # q=N0: one batched GNN pass
+        "mobo": CampaignSpec(
+            name=f"fig8-mobo-s{seed}", workload=workload, scenario="train",
+            strategy="mobo", fidelity=gnn_f0, n_evals_f0=N0, q=q,
+            n_candidates=cand, seed=seed),
+        "mfmobo": CampaignSpec(
+            name=f"fig8-mfmobo-s{seed}", workload=workload,
+            scenario="train", strategy="mfmobo",
+            fidelity=FidelitySchedule(
+                f1="analytical", f0="gnn", d1=3, d0=2, k=3,
+                calibrate_on_handover=True,
+                calibration={"n_designs": 3 if quick else 6,
+                             "epochs": 5 if quick else 15}),
+            n_evals_f0=N0, n_evals_f1=N1, q=q, n_candidates=cand,
+            seed=seed),
+    }
 
 
 def run(quick: bool = False) -> Dict:
     gnn, _ = trained_gnn(quick=quick)
     wl = GPT_BENCHMARKS[0]            # GPT-1.7B (paper also shows 175B/530B)
-    f1 = batched_objectives(wl, "analytical")
-    f0 = batched_objectives(wl, "gnn", gnn_params=gnn)
     seeds = (0,) if quick else (0, 1, 2)
     N0 = 8 if quick else 14
     N1 = 10 if quick else 18
@@ -39,7 +64,8 @@ def run(quick: bool = False) -> Dict:
     sim_hv = {"random": [], "mobo": [], "mfmobo": []}
     n_evals = 0
     calib_records = []
-    stats0 = eval_cache_stats()        # delta vs other benchmarks' traffic
+    stage_cache = {"f0": {"hits": 0, "misses": 0, "entries_added": 0},
+                   "f1": {"hits": 0, "misses": 0, "entries_added": 0}}
     t_all = time.time()
 
     def hv_under_sim(trace):
@@ -49,30 +75,25 @@ def run(quick: bool = False) -> Dict:
         comparisons need one common instrument."""
         ys = evaluate_objectives_batch(trace.designs, wl, "sim")
         return hypervolume_2d(obj_space(ys), hv_ref(15000.0))
+
     for seed in seeds:
         t0 = time.time()
-        tr_r = run_random(f0, N=N0, seed=seed)
-        tr_m = run_mobo(f0, d0=3, N=N0, seed=seed, n_candidates=cand, q=q)
-        cal = GNNCalibrator(gnn, wl, n_designs=3 if quick else 6,
-                            epochs=5 if quick else 15, seed=seed)
-        tr_f = run_mfmobo(cal.objectives(), f1, d0=2, d1=3, k=3, N0=N0,
-                          N1=N1, seed=seed, n_candidates=cand, q=q,
-                          on_handover=cal.on_handover)
-        curves["random"].append(tr_r.hv)
-        curves["mobo"].append(tr_m.hv)
-        curves["mfmobo"].append(tr_f.hv)
-        sim_hv["random"].append(hv_under_sim(tr_r))
-        sim_hv["mobo"].append(hv_under_sim(tr_m))
-        sim_hv["mfmobo"].append(hv_under_sim(tr_f))
-        n_evals += tr_r.n_evals + tr_m.n_evals + tr_f.n_evals
-        for rec in cal.records:
-            calib_records.append({
-                "seed": seed, "n_designs": rec.n_designs,
-                "n_graphs": rec.n_graphs, "train_s": rec.train_s,
-                "val_kendall_tau": rec.history.best_val_kendall_tau})
-        print(f"  seed {seed}: {time.time()-t0:.0f}s  "
-              f"final hv random={tr_r.hv[-1]:.2f} mobo={tr_m.hv[-1]:.2f} "
-              f"mfmobo={tr_f.hv[-1]:.2f}")
+        specs = method_specs(wl.name, seed, N0=N0, N1=N1, cand=cand, q=q,
+                             quick=quick)
+        results = {m: Campaign(spec, gnn_params=gnn).run()
+                   for m, spec in specs.items()}
+        for m, r in results.items():
+            curves[m].append(r.trace.hv)
+            sim_hv[m].append(hv_under_sim(r.trace))
+            n_evals += r.n_evals
+            for stage, sc in r.stage_cache.items():
+                for k in ("hits", "misses", "entries_added"):
+                    stage_cache[stage][k] += sc.get(k, 0)
+        for rec in results["mfmobo"].calibration:
+            calib_records.append(dict(rec, seed=seed))
+        print(f"  seed {seed}: {time.time()-t0:.0f}s  final hv "
+              + " ".join(f"{m}={r.trace.hv[-1]:.2f}"
+                         for m, r in results.items()))
     wall_s = time.time() - t_all
 
     def avg(tag):
@@ -96,9 +117,16 @@ def run(quick: bool = False) -> Dict:
     out["hv_sim_final"] = {k: float(np.mean(v)) for k, v in sim_hv.items()}
     out["wall_s"] = wall_s
     out["candidates_per_sec"] = n_evals / max(wall_s, 1e-9)
-    stats1 = eval_cache_stats()
-    out["eval_cache"] = {k: stats1[k] - stats0.get(k, 0)
-                         for k in ("hits", "misses")}
+    out["eval_cache"] = {
+        k: stage_cache["f0"][k] + stage_cache["f1"][k]
+        for k in ("hits", "misses")}
+    out["stage_cache"] = {
+        stage: dict(sc, hit_rate=sc["hits"] / max(sc["hits"] + sc["misses"],
+                                                  1))
+        for stage, sc in stage_cache.items()}
+    out["campaigns"] = sorted(s.name for s in method_specs(
+        wl.name, seeds[0], N0=N0, N1=N1, cand=cand, q=q,
+        quick=quick).values())
     save_artifact("fig8_explorer", out)
     print("\n=== Fig.8: explorer efficiency (avg hypervolume) ===")
     for k in ("random", "mobo", "mfmobo"):
@@ -111,6 +139,9 @@ def run(quick: bool = False) -> Dict:
     print(f"explorer throughput: {out['candidates_per_sec']:.2f} "
           f"evaluated candidates/sec (q={q}, {n_evals} evals in "
           f"{wall_s:.0f}s)")
+    for stage, sc in out["stage_cache"].items():
+        print(f"eval cache [{stage}]: {sc['hits']}/{sc['hits']+sc['misses']}"
+              f" hits ({100*sc['hit_rate']:.0f}%)")
     return out
 
 

@@ -32,13 +32,16 @@ _MODULES = {
     "roofline": "benchmarks.roofline_table",
 }
 
-# result keys worth tracking across PRs (when a benchmark reports them)
+# result keys worth tracking across PRs (when a benchmark reports them).
+# "campaigns" / "stage_cache" carry per-campaign wall-clock, candidates/sec
+# and per-fidelity-stage eval-cache hit-rates (DESIGN.md §9) so campaign
+# cost — including the f1->f0 handover — is visible in BENCH_dse.json.
 _TRACKED_KEYS = ("candidates_per_sec", "n_evaluations", "wall_s", "q",
                  "convergence_speedup_vs_mobo", "hv_improvement_at_equal_iters",
                  "hv_sim_final", "calibration", "batched_candidates_per_sec",
                  "n_points", "workload", "eval_cache",
                  "serving_front", "goodput_best", "slo", "explorer",
-                 "hetero_serving")
+                 "hetero_serving", "campaigns", "stage_cache")
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_dse.json")

@@ -127,19 +127,13 @@ class GNNCalibrator:
         self.records: List[CalibrationRecord] = []
 
     def objectives(self):
-        """Batch-aware f0 objective reading the latest calibrated params."""
-        from repro.core.evaluator import (evaluate_objectives,
-                                          evaluate_objectives_batch)
-
-        def f(designs):
-            if isinstance(designs, WSCDesign):
-                return evaluate_objectives(designs, self.wl, "gnn",
-                                           self.params)
-            return evaluate_objectives_batch(designs, self.wl, "gnn",
-                                             self.params)
-        f.batched = True
-        f.fidelity = "gnn"
-        return f
+        """Batch-aware f0 objective reading the latest calibrated params —
+        an `EvaluatorObjective` whose `params_fn` dereferences this
+        calibrator at call time, so post-handover evaluations automatically
+        use the fine-tuned pytree (and its fresh cache namespace)."""
+        from repro.explore.objectives import EvaluatorObjective
+        return EvaluatorObjective(self.wl, "gnn",
+                                  params_fn=lambda: self.params)
 
     def on_handover(self, designs: Sequence[WSCDesign],
                     ys: Sequence[Tuple[float, float]]) -> None:

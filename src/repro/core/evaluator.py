@@ -128,7 +128,11 @@ def clear_eval_cache() -> None:
 
 
 def eval_cache_stats() -> Dict[str, int]:
-    return dict(_CACHE_STATS, size=len(_EVAL_CACHE))
+    # `entries` == `size` (live cache entries); both names kept — `size`
+    # predates campaign reporting, `entries` is the documented key campaign
+    # traces diff per fidelity stage (DESIGN.md §9)
+    return dict(_CACHE_STATS, size=len(_EVAL_CACHE),
+                entries=len(_EVAL_CACHE))
 
 
 # ---------------------------------------------------------------------------
@@ -265,21 +269,13 @@ def serving_objectives(wl_base: LLMWorkload, mix, slo, **kw):
 
 def batched_objectives(wl: LLMWorkload, fidelity: Fidelity = "analytical",
                        gnn_params: Optional[Dict] = None):
-    """Batch-aware objective function for the explorer: call with a list of
-    designs, get a list of (throughput, power). The `.batched` marker lets
-    run_mfmobo/run_mobo evaluate whole proposals in one vectorized pass.
-    `fidelity` may be a registered name or a FidelityBackend instance."""
-    backend = get_backend(fidelity)
-
-    def f(designs):
-        if isinstance(designs, WSCDesign):
-            return evaluate_objectives(designs, wl, fidelity=backend,
-                                       gnn_params=gnn_params)
-        return evaluate_objectives_batch(designs, wl, fidelity=backend,
-                                         gnn_params=gnn_params)
-    f.batched = True
-    f.fidelity = backend.name
-    return f
+    """Batch-aware (throughput, power-per-wafer) objective for the
+    explorer. Subsumed by the campaign Objectives protocol — this is now a
+    thin constructor for `repro.explore.objectives.EvaluatorObjective`
+    (lazy import: repro.explore layers on top of this module). `fidelity`
+    may be a registered name or a FidelityBackend instance."""
+    from repro.explore.objectives import EvaluatorObjective
+    return EvaluatorObjective(wl, fidelity, gnn_params=gnn_params)
 
 
 __all__ = [

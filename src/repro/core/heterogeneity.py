@@ -218,3 +218,21 @@ def evaluate_hetero_serving(design_prefill: WSCDesign,
         kv_transfer_s=float(np.mean(kv_s)),
         n_decode_steps=m["n_decode_steps"],
         granularity=granularity)
+
+
+def hetero_serving_objectives(wl_base: LLMWorkload, mix: RequestMix,
+                              slo: ServingSLO, *, granularity: str,
+                              prefill_ratio: float = 0.5, slots: int = 8,
+                              n_wafers: int = 8,
+                              fidelity: Fidelity = "analytical",
+                              gnn_params: Optional[Dict] = None):
+    """(goodput, power-per-wafer) explorer objective for the disaggregated
+    serving scenario — thin constructor for the campaign Objectives
+    protocol (`repro.explore.objectives.HeteroServingObjective`, lazy
+    import: repro.explore layers on top of this module). Campaigns declare
+    the same thing with `scenario="hetero"` + a `HeteroSpec`."""
+    from repro.explore.objectives import HeteroServingObjective
+    return HeteroServingObjective(
+        wl_base, mix, slo, granularity=granularity,
+        prefill_ratio=prefill_ratio, slots=slots, n_wafers=n_wafers,
+        fidelity=fidelity, gnn_params=gnn_params)

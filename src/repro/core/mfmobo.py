@@ -12,18 +12,25 @@ notes CA simulation is kept out of the loop for cost), GP surrogates per
 Each iteration proposes a batch of q candidates by greedy q-EHVI with
 fantasized observations (DESIGN.md §5): pick the EHVI argmax, condition the
 GPs on its posterior mean (GP.condition_on), extend the fantasy front, and
-repeat — then evaluate the whole batch in one call. Evaluation functions
-may be scalar (design -> (throughput, power)) or batch-aware (marked with
-`.batched = True`, e.g. `evaluator.batched_objectives`), in which case the
-whole proposal is scored in a single vectorized pass. With q=1 the loop is
-the paper's serial Algorithm 1.
+repeat — then evaluate the whole batch in one call. Objectives follow the
+`repro.explore.objectives.Objective` protocol (`eval_many(designs)`);
+legacy callables — scalar (design -> (throughput, power)) functions or
+batch-aware functions marked `.batched = True` — are coerced at entry by
+`as_objective`. With q=1 the loop is the paper's serial Algorithm 1.
+
+This module keeps the algorithmic primitives (Trace, GP fitting in the
+log-objective space, greedy q-EHVI acquisition, valid-candidate sampling);
+the loop itself lives in `repro.explore.runner.ExplorationLoop` — a
+resumable state machine that campaigns (repro.explore.campaign) checkpoint
+and resume. `run_mfmobo` / `run_mobo` / `run_random` are thin wrappers
+over that loop with their historical signatures and rng-consumption order
+(traces are bit-identical to the pre-campaign implementations).
 
 Baselines for Fig. 8: random search and single-fidelity MOBO.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -31,7 +38,7 @@ import numpy as np
 from repro.core.design_space import WSCDesign, decode_batch, sample
 from repro.core.ehvi import ehvi_2d
 from repro.core.gp import GP
-from repro.core.pareto import hypervolume_2d, pareto_front, to_max_space
+from repro.core.pareto import pareto_front, to_max_space
 from repro.core.validator import validate
 
 EvalFn = Callable[[WSCDesign], Tuple[float, float]]   # -> (throughput, power)
@@ -45,6 +52,11 @@ class Trace:
     hv: List[float]                       # hypervolume after each evaluation
     wall_s: List[float]
     n_evals: int = 0                      # total evals incl. f1-only points
+    # per-fidelity-stage eval-cache traffic ({"f0"/"f1": {hits, misses,
+    # entries_added}}), recorded by the exploration loop so the cost of the
+    # fidelity handover is visible in campaign artifacts / BENCH_dse.json
+    stage_cache: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=dict)
 
     def points_max(self) -> np.ndarray:
         t = np.array([y[0] for y in self.ys])
@@ -54,18 +66,29 @@ class Trace:
     def pareto(self) -> np.ndarray:
         return pareto_front(self.points_max())
 
+    def cache_hit_rates(self) -> Dict[str, float]:
+        out = {}
+        for stage, sc in self.stage_cache.items():
+            n = sc.get("hits", 0) + sc.get("misses", 0)
+            out[stage] = sc.get("hits", 0) / n if n else 0.0
+        return out
+
 
 def _eval_many(f: EvalFn, designs: Sequence[WSCDesign]
                ) -> List[Tuple[float, float]]:
-    """Evaluate a proposal batch: one vectorized call for batch-aware
-    objective functions, a scalar loop otherwise."""
-    if getattr(f, "batched", False):
-        return [(float(t), float(p)) for t, p in f(list(designs))]
-    return [(float(y[0]), float(y[1])) for y in (f(d) for d in designs)]
+    """Legacy shim: objective coercion (including the old `.batched`
+    attribute sniff) now lives in `repro.explore.objectives.as_objective`;
+    the exploration loop calls `Objective.eval_many` directly."""
+    from repro.explore.objectives import as_objective
+    return as_objective(f).eval_many(list(designs))
 
 
 def _valid_candidates(rng: np.random.Generator, n: int,
                       max_tries: int = 8) -> Tuple[np.ndarray, List[WSCDesign]]:
+    """Sample until n validator-approved candidates are collected, topping
+    up with fresh batches for up to `max_tries` rounds. A design space whose
+    acceptance rate is too low to fill the request raises instead of
+    silently handing the acquisition a short (or empty) candidate set."""
     xs, ds = [], []
     for _ in range(max_tries):
         us = sample(rng, n)
@@ -76,7 +99,11 @@ def _valid_candidates(rng: np.random.Generator, n: int,
                 ds.append(r.design)
             if len(xs) >= n:
                 return np.array(xs), ds
-    return np.array(xs), ds
+    raise RuntimeError(
+        f"design-space sampling produced only {len(xs)}/{n} valid "
+        f"candidates after {max_tries} rounds of {n} draws — the validator "
+        "is rejecting (nearly) everything; loosen the design-space bounds "
+        "or raise max_tries")
 
 
 def _fit_models(X: np.ndarray, Y: np.ndarray) -> Tuple[GP, GP]:
@@ -150,118 +177,35 @@ def run_mfmobo(f0: EvalFn, f1: EvalFn, *, d0: int = 3, d1: int = 3,
     hook the online GNN calibration loop (calibration.py) uses to fine-tune
     f0 on simulator traces from the current Pareto neighborhood, so every
     recorded f0 objective (priors included — they seed the trace, the front
-    and M0's training set permanently) comes from calibrated params."""
-    rng = np.random.default_rng(seed)
-    ref = _hv_ref(peak_power)
-    tr = Trace([], [], [], [], [])
+    and M0's training set permanently) comes from calibrated params.
 
-    X0, Y0, X1, Y1 = [], [], [], []
-    hist_d: List[WSCDesign] = []          # every evaluated design (f1 + f0)
-    hist_y: List[Tuple[float, float]] = []
-    handover_fired = False
-
-    def record(x, d, y):
-        tr.xs.append(x)
-        tr.designs.append(d)
-        tr.ys.append(y)
-        pts = _obj_space(tr.ys)
-        tr.hv.append(hypervolume_2d(pts, ref))
-        tr.wall_s.append(time.time())
-
-    # priors: the f1 warm-up batch and the f0 batch each evaluate together
-    init_x, init_d = _valid_candidates(rng, d0 + d1)
-    ys1 = _eval_many(f1, init_d[:d1])
-    tr.n_evals += len(ys1)
-    for x, d, y in zip(init_x[:d1], init_d[:d1], ys1):
-        X1.append(x); Y1.append(y)
-        hist_d.append(d); hist_y.append(y)
-    if d0 > 0 and on_handover is not None:
-        handover_fired = True
-        on_handover(list(hist_d), list(hist_y))
-    ys0 = _eval_many(f0, init_d[d1:d1 + d0])
-    tr.n_evals += len(ys0)
-    for x, d, y in zip(init_x[d1:d1 + d0], init_d[d1:d1 + d0], ys0):
-        X0.append(x); Y0.append(y)
-        hist_d.append(d); hist_y.append(y)
-        record(x, d, y)
-
-    total = N0 + N1 - d0 - d1
-    done = 0
-    while done < total:
-        use_f0 = done >= N1 - d1
-        use_m0 = done >= N1 - d1 + k
-        if use_f0 and not handover_fired:
-            handover_fired = True
-            if on_handover is not None:
-                on_handover(list(hist_d), list(hist_y))
-        # batch size: q, clipped to the remaining budget and to the next
-        # fidelity-schedule boundary so every evaluation in the batch runs
-        # at the fidelity the schedule assigns it
-        boundaries = [b for b in (N1 - d1, N1 - d1 + k, total) if b > done]
-        q_eff = max(1, min(q, min(boundaries) - done))
-
-        cand_x, cand_d = _valid_candidates(rng, n_candidates)
-        if use_m0 and len(X0) >= 2:
-            models = _fit_models(np.array(X0), np.array(Y0))
-            ev = _obj_space(Y0)
-        else:
-            models = _fit_models(np.array(X1), np.array(Y1))
-            ev = _obj_space(Y1) if not use_f0 or not Y0 else _obj_space(Y0)
-        js = _acquire_batch(models, cand_x, ev, ref, q=q_eff)
-        batch_d = [cand_d[j] for j in js]
-        ys = _eval_many(f0 if use_f0 else f1, batch_d)
-        tr.n_evals += len(ys)
-        for j, y in zip(js, ys):
-            hist_d.append(cand_d[j]); hist_y.append(y)
-            if use_f0:
-                X0.append(cand_x[j]); Y0.append(y)
-                record(cand_x[j], cand_d[j], y)
-            else:
-                X1.append(cand_x[j]); Y1.append(y)
-        done += len(js)
-    return tr
+    Thin wrapper over `repro.explore.runner.ExplorationLoop` (DESIGN.md
+    §9); use a `repro.explore.Campaign` instead when the run should be
+    serializable / checkpointable / resumable."""
+    from repro.explore.runner import ExplorationLoop, LoopConfig
+    cfg = LoopConfig(strategy="mfmobo", N0=N0, N1=N1, d0=d0, d1=d1, k=k,
+                     q=q, n_candidates=n_candidates, peak_power=peak_power,
+                     seed=seed)
+    return ExplorationLoop(cfg, f0, f1=f1, on_handover=on_handover).run()
 
 
 def run_mobo(f0: EvalFn, *, d0: int = 6, N: int = 20,
              peak_power: float = 15000.0, n_candidates: int = 256,
              q: int = 1, seed: int = 0) -> Trace:
     """Single-fidelity MOBO baseline (paper Fig. 8)."""
-    rng = np.random.default_rng(seed)
-    ref = _hv_ref(peak_power)
-    tr = Trace([], [], [], [], [])
-    X, Y = [], []
-
-    def record(x, d, y):
-        X.append(x); Y.append(y)
-        tr.xs.append(x); tr.designs.append(d); tr.ys.append(y)
-        tr.hv.append(hypervolume_2d(_obj_space(tr.ys), ref))
-        tr.wall_s.append(time.time())
-        tr.n_evals += 1
-
-    init_x, init_d = _valid_candidates(rng, d0)
-    for x, d, y in zip(init_x, init_d, _eval_many(f0, init_d)):
-        record(x, d, y)
-    done = 0
-    while done < N - d0:
-        q_eff = max(1, min(q, N - d0 - done))
-        models = _fit_models(np.array(X), np.array(Y))
-        cand_x, cand_d = _valid_candidates(rng, n_candidates)
-        js = _acquire_batch(models, cand_x, _obj_space(Y), ref, q=q_eff)
-        for j, y in zip(js, _eval_many(f0, [cand_d[j] for j in js])):
-            record(cand_x[j], cand_d[j], y)
-        done += len(js)
-    return tr
+    from repro.explore.runner import ExplorationLoop, LoopConfig
+    cfg = LoopConfig(strategy="mobo", N0=N, d0=d0, q=q,
+                     n_candidates=n_candidates, peak_power=peak_power,
+                     seed=seed)
+    return ExplorationLoop(cfg, f0).run()
 
 
 def run_random(f0: EvalFn, *, N: int = 20, peak_power: float = 15000.0,
                seed: int = 0) -> Trace:
-    rng = np.random.default_rng(seed)
-    ref = _hv_ref(peak_power)
-    tr = Trace([], [], [], [], [])
-    xs, ds = _valid_candidates(rng, N)
-    for x, d, y in zip(xs, ds, _eval_many(f0, ds)):
-        tr.xs.append(x); tr.designs.append(d); tr.ys.append(y)
-        tr.hv.append(hypervolume_2d(_obj_space(tr.ys), ref))
-        tr.wall_s.append(time.time())
-        tr.n_evals += 1
-    return tr
+    from repro.explore.runner import ExplorationLoop, LoopConfig
+    # q=N: evaluate the whole sampled pool in one batch call, exactly like
+    # the pre-campaign implementation (campaigns chunk by q instead, for
+    # checkpoint granularity)
+    cfg = LoopConfig(strategy="random", N0=N, q=N, peak_power=peak_power,
+                     seed=seed)
+    return ExplorationLoop(cfg, f0).run()

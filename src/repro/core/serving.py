@@ -30,7 +30,6 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core import components as C
 from repro.core.design_space import WSCDesign
 from repro.core.fidelity import EvalResult, FidelityBackend, get_backend
 from repro.core.workload import LLMWorkload, RequestMix
@@ -259,22 +258,13 @@ def serving_objectives(wl_base: LLMWorkload, mix: RequestMix,
                        fidelity: Fidelity = "analytical",
                        gnn_params: Optional[Dict] = None):
     """Batch-aware (SLO goodput, power-per-wafer) objective for the
-    explorer — `run_mfmobo`/`run_mobo` evaluate whole q-proposals in one
-    vectorized pass. Infeasible designs map to (0, peak wafer power)."""
-    backend = get_backend(fidelity)
-
-    def f(designs):
-        single = isinstance(designs, WSCDesign)
-        rs = evaluate_serving_batch(
-            [designs] if single else list(designs), wl_base, mix, slo,
-            slots=slots, fidelity=backend, gnn_params=gnn_params)
-        out = [(r.goodput_tok_s, r.power_w / max(r.n_wafers, 1))
-               if r.feasible and np.isfinite(r.power_w)
-               else (0.0, C.WAFER_POWER_W) for r in rs]
-        return out[0] if single else out
-    f.batched = True
-    f.fidelity = backend.name
-    return f
+    explorer; infeasible designs map to (0, peak wafer power). Subsumed by
+    the campaign Objectives protocol — thin constructor for
+    `repro.explore.objectives.ServingObjective` (lazy import: repro.explore
+    layers on top of this module)."""
+    from repro.explore.objectives import ServingObjective
+    return ServingObjective(wl_base, mix, slo, slots=slots,
+                            fidelity=fidelity, gnn_params=gnn_params)
 
 
 # ---------------------------------------------------------------------------

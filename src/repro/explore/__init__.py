@@ -1,0 +1,37 @@
+"""repro.explore — declarative, serializable, resumable DSE campaigns.
+
+One entry point for the paper's exploration experiments (DESIGN.md §9):
+
+    from repro.explore import Campaign, CampaignSpec
+    spec = CampaignSpec.from_json("examples/campaigns/quick_train_mfmobo.json")
+    result = Campaign(spec).run(checkpoint_path="run.ckpt")
+    result = Campaign.resume("run.ckpt").run()        # continue a run
+
+CLI: ``python -m repro.explore <spec>.json [--resume CKPT]``.
+"""
+from repro.explore.campaign import (  # noqa: F401
+    Campaign,
+    CampaignResult,
+    CampaignSpec,
+    FidelitySchedule,
+    HeteroSpec,
+    SCENARIOS,
+    ServingSpec,
+    resolve_workload,
+    run_campaign,
+)
+from repro.explore.objectives import (  # noqa: F401
+    ConstraintSpec,
+    EvaluatorObjective,
+    HeteroServingObjective,
+    Objective,
+    ObjectiveSpec,
+    ServingObjective,
+    as_objective,
+)
+from repro.explore.runner import (  # noqa: F401
+    ExplorationLoop,
+    LoopConfig,
+    LoopState,
+    STRATEGIES,
+)

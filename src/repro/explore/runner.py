@@ -1,0 +1,359 @@
+"""Resumable exploration loop — the campaign-grade home of Algorithm 1.
+
+The MFMOBO / MOBO / random-search loops that used to live inline in
+`repro.core.mfmobo.run_*` are restructured here as an explicit state
+machine: `LoopConfig` (strategy + budgets + schedule, validated up front so
+budget-overshooting configurations fail loudly) drives `step()` transitions
+over a picklable `LoopState` (the rng generator, the GP training sets, the
+trace, the schedule position). Because the GP surrogates are *refit from
+the training set every iteration* (deterministically — fixed init, jitted
+Adam), the state is tiny and a checkpoint written at any step boundary
+resumes bit-identically: the continuation consumes the identical rng
+stream and refits the identical models, so a resumed trace equals the
+uninterrupted one at a fixed seed (pinned by tests/test_campaign.py).
+
+`repro.core.mfmobo.run_mfmobo/run_mobo/run_random` are thin wrappers over
+this loop (same signatures, same rng-consumption order, hence bit-identical
+traces vs their pre-refactor selves). Objectives are `Objective` protocol
+instances (repro.explore.objectives); legacy callables are coerced at entry.
+
+Per-evaluation bookkeeping: every batch evaluated at a fidelity stage
+("f0"/"f1") snapshots the cross-call eval cache before and after, so the
+trace records cache hit-rates per stage — the cost of the fidelity
+handover is visible in campaign artifacts and BENCH_dse.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.mfmobo import (
+    Trace,
+    _acquire_batch,
+    _fit_models,
+    _valid_candidates,
+    hv_ref,
+    obj_space,
+)
+from repro.core.design_space import WSCDesign
+from repro.core.pareto import hypervolume_2d
+from repro.explore.objectives import Objective, as_objective
+
+STRATEGIES = ("mfmobo", "mobo", "random")
+
+CHECKPOINT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopConfig:
+    """Strategy + budgets + fidelity schedule. N0 is the f0 evaluation
+    budget (for mobo/random: the total budget); N1/d1/k only apply to
+    mfmobo. Validation guarantees the budgets are satisfiable exactly —
+    priors never exceed their stage budget, so the clamped proposal loop
+    honors N0/N1 to the evaluation."""
+    strategy: str = "mfmobo"
+    N0: int = 20
+    N1: int = 30
+    d0: int = 3
+    d1: int = 3
+    k: int = 5
+    q: int = 1
+    n_candidates: int = 256
+    peak_power: float = 15000.0
+    seed: int = 0
+
+    def validate(self) -> "LoopConfig":
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; "
+                             f"expected one of {STRATEGIES}")
+        if self.q < 1 or self.n_candidates < 1:
+            raise ValueError("q and n_candidates must be >= 1")
+        if self.N0 < 1:
+            raise ValueError("evaluation budget N0 must be >= 1")
+        if self.strategy == "mfmobo":
+            if not (0 <= self.d0 <= self.N0):
+                raise ValueError(
+                    f"f0 priors d0={self.d0} must fit the f0 budget "
+                    f"N0={self.N0}")
+            if not (0 < self.d1 <= self.N1):
+                raise ValueError(
+                    f"f1 priors d1={self.d1} must fit the f1 budget "
+                    f"N1={self.N1}")
+            if self.k < 0:
+                raise ValueError("handover width k must be >= 0")
+        elif self.strategy == "mobo":
+            if not (2 <= self.d0 <= self.N0):
+                raise ValueError(
+                    f"priors d0={self.d0} must satisfy 2 <= d0 <= N0="
+                    f"{self.N0} (the GP needs >= 2 points)")
+        return self
+
+    def total_evals(self) -> int:
+        if self.strategy == "mfmobo":
+            return self.N0 + self.N1
+        return self.N0
+
+
+@dataclasses.dataclass
+class LoopState:
+    """Everything a checkpoint needs: picklable, GP-free (models are refit
+    from X/Y each iteration)."""
+    rng: np.random.Generator
+    trace: Trace
+    X0: List[np.ndarray]
+    Y0: List[Tuple[float, float]]
+    X1: List[np.ndarray]
+    Y1: List[Tuple[float, float]]
+    hist_d: List[WSCDesign]
+    hist_y: List[Tuple[float, float]]
+    done: int = 0                     # post-prior proposal evals completed
+    steps: int = 0                    # completed step() transitions
+    initialized: bool = False
+    handover_fired: bool = False
+    pending: Optional[List] = None    # random: sampled-but-unevaluated queue
+    wall_s: float = 0.0               # accumulated across run() segments
+
+
+def _fresh_state(cfg: LoopConfig) -> LoopState:
+    tr = Trace([], [], [], [], [])
+    tr.stage_cache = {"f0": {"hits": 0, "misses": 0, "entries_added": 0},
+                      "f1": {"hits": 0, "misses": 0, "entries_added": 0}}
+    return LoopState(rng=np.random.default_rng(cfg.seed), trace=tr,
+                     X0=[], Y0=[], X1=[], Y1=[], hist_d=[], hist_y=[])
+
+
+class ExplorationLoop:
+    """Step-able exploration run. One `step()` = the prior batch (first
+    call) or one proposal batch acquired + evaluated; checkpoints are legal
+    at any step boundary."""
+
+    def __init__(self, cfg: LoopConfig, f0, f1=None, *,
+                 on_handover: Optional[Callable] = None,
+                 state: Optional[LoopState] = None):
+        self.cfg = cfg.validate()
+        self.f0: Objective = as_objective(f0)
+        self.f1: Optional[Objective] = (as_objective(f1)
+                                        if f1 is not None else None)
+        if cfg.strategy == "mfmobo" and self.f1 is None:
+            raise ValueError("mfmobo needs a low-fidelity objective f1")
+        self.on_handover = on_handover
+        self.ref = hv_ref(cfg.peak_power)
+        self.state = state if state is not None else _fresh_state(cfg)
+
+    # -- bookkeeping -------------------------------------------------------
+
+    def _eval(self, obj: Objective, designs, stage: str):
+        """Evaluate a batch at a fidelity stage, attributing eval-cache
+        traffic (hits/misses/entries added) to the stage on the trace."""
+        from repro.core.evaluator import eval_cache_stats
+        s0 = eval_cache_stats()
+        ys = obj.eval_many(list(designs))
+        s1 = eval_cache_stats()
+        sc = self.state.trace.stage_cache.setdefault(
+            stage, {"hits": 0, "misses": 0, "entries_added": 0})
+        sc["hits"] += s1["hits"] - s0["hits"]
+        sc["misses"] += s1["misses"] - s0["misses"]
+        sc["entries_added"] += max(s1["entries"] - s0["entries"], 0)
+        self.state.trace.n_evals += len(ys)
+        return ys
+
+    def _record(self, x, d, y):
+        tr = self.state.trace
+        tr.xs.append(x)
+        tr.designs.append(d)
+        tr.ys.append(y)
+        tr.hv.append(hypervolume_2d(obj_space(tr.ys), self.ref))
+        tr.wall_s.append(time.time())
+
+    def _fire_handover(self):
+        self.state.handover_fired = True
+        if self.on_handover is not None:
+            self.on_handover(list(self.state.hist_d),
+                             list(self.state.hist_y))
+
+    # -- step machine ------------------------------------------------------
+
+    @property
+    def finished(self) -> bool:
+        st, cfg = self.state, self.cfg
+        if not st.initialized:
+            return False
+        if cfg.strategy == "mfmobo":
+            return st.done >= cfg.N0 + cfg.N1 - cfg.d0 - cfg.d1
+        if cfg.strategy == "mobo":
+            return st.done >= cfg.N0 - cfg.d0
+        return not st.pending                         # random
+
+    def step(self) -> bool:
+        """Advance one batch; returns False once the budget is spent."""
+        if self.finished:
+            return False
+        st, cfg = self.state, self.cfg
+        if not st.initialized:
+            self._init_step()
+        elif cfg.strategy == "mfmobo":
+            self._mfmobo_step()
+        elif cfg.strategy == "mobo":
+            self._mobo_step()
+        else:
+            self._random_step()
+        st.steps += 1
+        return True
+
+    def run(self, *, max_steps: Optional[int] = None,
+            checkpoint_every: int = 0,
+            checkpoint_cb: Optional[Callable[[], None]] = None) -> Trace:
+        t0 = time.time()
+
+        def flush_wall():
+            # fold the running segment into state *before* any checkpoint
+            # is pickled, so a crash-resume doesn't under-report wall time
+            # (and overstate candidates/sec)
+            nonlocal t0
+            now = time.time()
+            self.state.wall_s += now - t0
+            t0 = now
+
+        n = 0
+        try:
+            while (max_steps is None or n < max_steps) and self.step():
+                n += 1
+                if (checkpoint_cb is not None and checkpoint_every
+                        and n % checkpoint_every == 0):
+                    flush_wall()
+                    checkpoint_cb()
+        finally:
+            flush_wall()
+        if checkpoint_cb is not None:
+            checkpoint_cb()
+        return self.state.trace
+
+    # -- strategy bodies (rng-consumption order identical to the legacy
+    #    repro.core.mfmobo.run_* loops, so traces are bit-identical) -------
+
+    def _init_step(self):
+        st, cfg = self.state, self.cfg
+        if cfg.strategy == "mfmobo":
+            init_x, init_d = _valid_candidates(st.rng, cfg.d0 + cfg.d1)
+            ys1 = self._eval(self.f1, init_d[:cfg.d1], "f1")
+            for x, d, y in zip(init_x[:cfg.d1], init_d[:cfg.d1], ys1):
+                st.X1.append(x)
+                st.Y1.append(y)
+                st.hist_d.append(d)
+                st.hist_y.append(y)
+            if cfg.d0 > 0 and self.on_handover is not None:
+                self._fire_handover()
+            ys0 = self._eval(self.f0, init_d[cfg.d1:cfg.d1 + cfg.d0], "f0")
+            for x, d, y in zip(init_x[cfg.d1:cfg.d1 + cfg.d0],
+                               init_d[cfg.d1:cfg.d1 + cfg.d0], ys0):
+                st.X0.append(x)
+                st.Y0.append(y)
+                st.hist_d.append(d)
+                st.hist_y.append(y)
+                self._record(x, d, y)
+        elif cfg.strategy == "mobo":
+            init_x, init_d = _valid_candidates(st.rng, cfg.d0)
+            for x, d, y in zip(init_x, init_d,
+                               self._eval(self.f0, init_d, "f0")):
+                st.X0.append(x)
+                st.Y0.append(y)
+                self._record(x, d, y)
+        else:                                         # random
+            xs, ds = _valid_candidates(st.rng, cfg.N0)
+            st.pending = [(x, d) for x, d in zip(xs, ds)]
+        st.initialized = True
+
+    def _mfmobo_step(self):
+        st, cfg = self.state, self.cfg
+        total = cfg.N0 + cfg.N1 - cfg.d0 - cfg.d1
+        use_f0 = st.done >= cfg.N1 - cfg.d1
+        use_m0 = st.done >= cfg.N1 - cfg.d1 + cfg.k
+        if use_f0 and not st.handover_fired:
+            self._fire_handover()
+        # batch size: q, clipped to the remaining budget and to the next
+        # fidelity-schedule boundary so every evaluation in the batch runs
+        # at the fidelity the schedule assigns it — the final batch is
+        # clamped so the trace honors the N0/N1 budget exactly
+        boundaries = [b for b in (cfg.N1 - cfg.d1, cfg.N1 - cfg.d1 + cfg.k,
+                                  total) if b > st.done]
+        q_eff = max(1, min(cfg.q, min(boundaries) - st.done))
+
+        cand_x, cand_d = _valid_candidates(st.rng, cfg.n_candidates)
+        if use_m0 and len(st.X0) >= 2:
+            models = _fit_models(np.array(st.X0), np.array(st.Y0))
+            ev = obj_space(st.Y0)
+        else:
+            models = _fit_models(np.array(st.X1), np.array(st.Y1))
+            ev = (obj_space(st.Y1) if not use_f0 or not st.Y0
+                  else obj_space(st.Y0))
+        js = _acquire_batch(models, cand_x, ev, self.ref, q=q_eff)
+        batch_d = [cand_d[j] for j in js]
+        ys = self._eval(self.f0 if use_f0 else self.f1, batch_d,
+                        "f0" if use_f0 else "f1")
+        for j, y in zip(js, ys):
+            st.hist_d.append(cand_d[j])
+            st.hist_y.append(y)
+            if use_f0:
+                st.X0.append(cand_x[j])
+                st.Y0.append(y)
+                self._record(cand_x[j], cand_d[j], y)
+            else:
+                st.X1.append(cand_x[j])
+                st.Y1.append(y)
+        st.done += len(js)
+
+    def _mobo_step(self):
+        st, cfg = self.state, self.cfg
+        q_eff = max(1, min(cfg.q, cfg.N0 - cfg.d0 - st.done))
+        models = _fit_models(np.array(st.X0), np.array(st.Y0))
+        cand_x, cand_d = _valid_candidates(st.rng, cfg.n_candidates)
+        js = _acquire_batch(models, cand_x, obj_space(st.Y0), self.ref,
+                            q=q_eff)
+        ys = self._eval(self.f0, [cand_d[j] for j in js], "f0")
+        for j, y in zip(js, ys):
+            st.X0.append(cand_x[j])
+            st.Y0.append(y)
+            self._record(cand_x[j], cand_d[j], y)
+        st.done += len(js)
+
+    def _random_step(self):
+        st, cfg = self.state, self.cfg
+        batch = st.pending[:max(cfg.q, 1)]
+        st.pending = st.pending[len(batch):]
+        ys = self._eval(self.f0, [d for _, d in batch], "f0")
+        for (x, d), y in zip(batch, ys):
+            self._record(x, d, y)
+        st.done += len(batch)
+
+    # -- checkpointing -----------------------------------------------------
+
+    def save_state(self, path: str, extra: Optional[Dict] = None) -> str:
+        blob = {"version": CHECKPOINT_VERSION,
+                "cfg": dataclasses.asdict(self.cfg),
+                "state": self.state,
+                "extra": extra or {}}
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            pickle.dump(blob, f)
+        os.replace(tmp, path)         # atomic: a crash mid-write can't
+        return path                   # corrupt the last good checkpoint
+
+    @staticmethod
+    def load_state(path: str) -> Tuple[LoopConfig, LoopState, Dict]:
+        with open(path, "rb") as f:
+            blob = pickle.load(f)
+        v = blob.get("version")
+        if v != CHECKPOINT_VERSION:
+            raise ValueError(f"checkpoint {path} has version {v!r}; this "
+                             f"build reads version {CHECKPOINT_VERSION}")
+        return (LoopConfig(**blob["cfg"]), blob["state"],
+                blob.get("extra", {}))
+
+
+__all__ = ["CHECKPOINT_VERSION", "ExplorationLoop", "LoopConfig",
+           "LoopState", "STRATEGIES"]
