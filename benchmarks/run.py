@@ -116,7 +116,44 @@ def measure_batch_speedup(n_designs: int = 64, max_strategies: int = 24,
     return out
 
 
-def write_bench_json(records, quick: bool, speedup):
+def measure_proposal_rate(n_obs: int = 16, n_candidates: int = 96,
+                          q: int = 4, iters: int = 20):
+    """Optimizer-only acceptance probe: one full MFMOBO proposal iteration
+    = GP pair refit on the observation set + greedy q-EHVI acquisition over
+    the candidate pool (posterior predict + EHVI + q rank-1 fantasizations),
+    with evaluation excluded — i.e. the jitted hot path of DESIGN.md §10.
+    Kernels are warmed first so the probe times steady-state proposals, not
+    XLA compilation."""
+    import numpy as np
+
+    from repro.core.design_space import DIMS
+    from repro.core.mfmobo import (_acquire_batch, _fit_models, hv_ref,
+                                   obj_space, warm_optimizer_kernels)
+
+    warm_optimizer_kernels(n_obs, n_candidates=n_candidates, q=q)
+    rng = np.random.default_rng(7)
+    X = rng.random((n_obs, len(DIMS)))
+    Y = np.stack([1e3 * (1.0 + rng.random(n_obs)),
+                  1e3 * (2.0 + rng.random(n_obs))], 1)
+    ev = obj_space([tuple(y) for y in Y])
+    ref = hv_ref(15000.0)
+    cands = rng.random((iters, n_candidates, len(DIMS)))
+    t0 = time.perf_counter()
+    for i in range(iters):
+        models = _fit_models(X, Y)
+        _acquire_batch(models, cands[i], ev, ref, q=q)
+    wall = time.perf_counter() - t0
+    return {
+        "n_obs": n_obs,
+        "n_candidates": n_candidates,
+        "q": q,
+        "iters": iters,
+        "wall_s": wall,
+        "proposals_per_sec": iters / max(wall, 1e-9),
+    }
+
+
+def write_bench_json(records, quick: bool, speedup, optimizer=None):
     # merge into the existing file so an `--only` subset run refreshes its
     # own records without wiping the other benchmarks' tracked history
     merged = {}
@@ -131,6 +168,7 @@ def write_bench_json(records, quick: bool, speedup):
         "generated_unix_s": time.time(),
         "quick": quick,
         "batch_eval": speedup,
+        "optimizer": optimizer or {"status": "failed"},
         "benchmarks": merged,
     }
     with open(BENCH_JSON, "w") as f:
@@ -192,7 +230,24 @@ def main():
         speedup = {"status": "failed"}
         failures.append("batch_speedup")
 
-    path = write_bench_json(records, args.quick, speedup)
+    print(f"\n{'='*70}\nMeasuring compiled-optimizer proposal rate"
+          f"\n{'='*70}", flush=True)
+    try:
+        optimizer = measure_proposal_rate()
+        print(f"optimizer   : {optimizer['iters']} proposal iterations "
+              f"(refit + q={optimizer['q']} acquire over "
+              f"{optimizer['n_candidates']} candidates) in "
+              f"{optimizer['wall_s']:.3f}s -> "
+              f"{optimizer['proposals_per_sec']:.1f} proposals/sec")
+        if optimizer["proposals_per_sec"] < 2.0:
+            print("optimizer proposal rate below the 2/sec acceptance floor")
+            failures.append("optimizer_proposal_rate_floor")
+    except Exception:
+        traceback.print_exc()
+        optimizer = {"status": "failed"}
+        failures.append("proposal_rate")
+
+    path = write_bench_json(records, args.quick, speedup, optimizer)
     print(f"wrote {path}")
 
     if failures:

@@ -14,26 +14,40 @@ Both factors are closed-form:
     integral_l^u (1 - Phi((a-mu)/s)) da = s [H(z_u) - H(z_l)],
         H(z) = z (1 - Phi(z)) - phi(z)
     E[(Y - b)^+] = (mu - b)(1 - Phi(z_b)) + s phi(z_b),  z_b = (b-mu)/s
+
+Two implementations (DESIGN.md §10): `ehvi_2d` is the jitted JAX kernel
+(candidates x strips in one vmapped broadcast, front padded to a pow2
+bucket with (+inf, -inf) sentinels that sort past the real points and
+collapse to zero-width strips); `ehvi_2d_ref` is the retained NumPy
+reference the JAX path is property-tested against.
 """
 from __future__ import annotations
 
 import math
+from functools import lru_cache
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+from scipy.special import erf as _erf
+
+from repro.core.gp import bucket_size
+
+_SQRT2 = math.sqrt(2.0)
+_SQRT_2PI = math.sqrt(2.0 * math.pi)
 
 
-try:                                 # scipy ships with jax; fall back to a
-    from scipy.special import erf as _erf      # per-element loop without it
-except ImportError:                  # pragma: no cover
-    _erf = np.vectorize(math.erf)
+# ---------------------------------------------------------------------------
+# NumPy reference (property-test oracle)
+# ---------------------------------------------------------------------------
 
 
 def _phi(z):
-    return np.exp(-0.5 * z * z) / math.sqrt(2 * math.pi)
+    return np.exp(-0.5 * z * z) / _SQRT_2PI
 
 
 def _Phi(z):
-    return 0.5 * (1.0 + _erf(np.asarray(z, float) / math.sqrt(2.0)))
+    return 0.5 * (1.0 + _erf(np.asarray(z, float) / _SQRT2))
 
 
 def _H(z):
@@ -56,11 +70,10 @@ def _excess(b, mu, s):
     return (mu - b) * (1.0 - _Phi(z)) + s * _phi(z)
 
 
-def ehvi_2d(mu: np.ndarray, sigma: np.ndarray, front: np.ndarray,
-            ref: np.ndarray) -> np.ndarray:
-    """EHVI for N candidates. mu/sigma (N, 2); front (F, 2) current Pareto
-    set (may be empty); ref (2,). Returns (N,). Fully vectorized: strips x
-    candidates in one broadcast rather than a per-strip Python loop."""
+def ehvi_2d_ref(mu: np.ndarray, sigma: np.ndarray, front: np.ndarray,
+                ref: np.ndarray) -> np.ndarray:
+    """NumPy EHVI for N candidates. mu/sigma (N, 2); front (F, 2) current
+    Pareto set (may be empty); ref (2,). Returns (N,)."""
     mu = np.atleast_2d(np.asarray(mu, float))
     sigma = np.atleast_2d(np.asarray(sigma, float))
     ref = np.asarray(ref, float)
@@ -87,3 +100,79 @@ def ehvi_2d(mu: np.ndarray, sigma: np.ndarray, front: np.ndarray,
                       0.0)
     exc = np.maximum(_excess(b, mu[None, :, 1], sigma[None, :, 1]), 0.0)
     return np.where(keep, mass * exc, 0.0).sum(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# jitted JAX kernel
+# ---------------------------------------------------------------------------
+
+
+def _Phi_j(z):
+    return 0.5 * (1.0 + jax.scipy.special.erf(z / _SQRT2))
+
+
+def _phi_j(z):
+    return jnp.exp(-0.5 * z * z) / _SQRT_2PI
+
+
+def _H_j(z):
+    return z * (1.0 - _Phi_j(z)) - _phi_j(z)
+
+
+def ehvi_padded(mu, sg, pts, pts_mask, ref):
+    """Jit-safe EHVI core over a padded point buffer.
+
+    `pts` (F, 2) with `pts_mask` flagging real rows; the Pareto filter runs
+    inside (O(F^2) masked dominance), so callers can hand it the raw
+    fantasy buffer. Masked/dominated rows become (+inf, -inf) sentinels:
+    they sort after every real front point, form zero-width [inf, inf)
+    strips that the `keep` mask drops, and leave the beyond-front strip's
+    envelope at max(-inf, ref2) = ref2 — exactly the unpadded strip set.
+    """
+    valid = pts_mask > 0
+    ge = (pts[:, None, :] >= pts[None, :, :]).all(-1)
+    gt = (pts[:, None, :] > pts[None, :, :]).any(-1)
+    dominated = (valid[:, None] & ge & gt).any(0)
+    on_front = valid & ~dominated
+    o1 = jnp.where(on_front, pts[:, 0], jnp.inf)
+    o2 = jnp.where(on_front, pts[:, 1], -jnp.inf)
+    order = jnp.argsort(o1)
+    f = o1[order]
+    v = o2[order]
+    edges = jnp.concatenate([ref[0:1], f, jnp.asarray([jnp.inf], f.dtype)])
+    bs = jnp.maximum(jnp.concatenate([v, ref[1:2]]), ref[1])
+    l = edges[:-1, None]                        # (S, 1)
+    u = edges[1:, None]
+    b = bs[:, None]
+    keep = u > l
+    s1 = jnp.maximum(sg[None, :, 0], 1e-12)
+    hu = jnp.where(jnp.isinf(u), 0.0,
+                   _H_j(jnp.where(jnp.isinf(u), 0.0, (u - mu[None, :, 0]) / s1)))
+    mass = jnp.maximum(s1 * (hu - _H_j((l - mu[None, :, 0]) / s1)), 0.0)
+    s2 = jnp.maximum(sg[None, :, 1], 1e-12)
+    z = (b - mu[None, :, 1]) / s2
+    exc = jnp.maximum((mu[None, :, 1] - b) * (1.0 - _Phi_j(z))
+                      + s2 * _phi_j(z), 0.0)
+    return jnp.where(keep, mass * exc, 0.0).sum(axis=0)
+
+
+_ehvi_jit = jax.jit(ehvi_padded)
+
+
+def ehvi_2d(mu: np.ndarray, sigma: np.ndarray, front: np.ndarray,
+            ref: np.ndarray) -> np.ndarray:
+    """EHVI for N candidates, one jitted XLA call. Same contract as
+    `ehvi_2d_ref` (the front is padded to a pow2 bucket, so repeated calls
+    with growing fronts reuse a handful of compiled shapes)."""
+    mu = np.atleast_2d(np.asarray(mu, np.float32))
+    sigma = np.atleast_2d(np.asarray(sigma, np.float32))
+    F = len(front)
+    Fb = bucket_size(max(F, 1), minimum=4)
+    pts = np.zeros((Fb, 2), np.float32)
+    mask = np.zeros(Fb, np.float32)
+    if F:
+        pts[:F] = np.asarray(front, np.float32)
+        mask[:F] = 1.0
+    out = _ehvi_jit(jnp.asarray(mu), jnp.asarray(sigma), jnp.asarray(pts),
+                    jnp.asarray(mask), jnp.asarray(np.asarray(ref, np.float32)))
+    return np.array(out, np.float64)

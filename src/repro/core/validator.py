@@ -1,15 +1,23 @@
 """Design Point Validator (paper §V-E): area, power, yield, SRAM-compiler
 feasibility, and TSV stress constraints. Resolves the redundancy (spares per
 row) needed for the 0.9 yield target as a side effect.
+
+`validate` is the scalar reference; `validate_batch` applies the same
+constraint chain to N designs with vectorized geometry (DesignBatch) and one
+batched yield resolution — the candidate-generation hot path in the
+exploration loop.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core import components as C
-from repro.core.design_space import WSCDesign
-from repro.core.yield_model import YIELD_TARGET, min_spares_for_target
+from repro.core.design_space import DesignBatch, WSCDesign
+from repro.core.yield_model import (YIELD_TARGET, min_spares_for_target,
+                                    min_spares_for_target_batch)
 
 
 @dataclasses.dataclass
@@ -73,3 +81,79 @@ def validate(d: WSCDesign, peak_power_w: float = C.WAFER_POWER_W
         return ValidationResult(False, "static_power")
 
     return ValidationResult(True, "", resolved, wy)
+
+
+def validate_batch(designs: Sequence[WSCDesign],
+                   peak_power_w: float = C.WAFER_POWER_W
+                   ) -> List[ValidationResult]:
+    """Vectorized `validate`: result i matches validate(designs[i]) — same
+    constraint order, same first-failing reason, same resolved spares (the
+    scalar spares resolver delegates to the batched one, so the two paths
+    agree bitwise)."""
+    designs = list(designs)
+    if not designs:
+        return []
+    N = len(designs)
+    db = DesignBatch.from_designs(designs)
+    reason = np.full(N, "", object)
+
+    def fail(mask: np.ndarray, why: str) -> None:
+        hit = mask & (reason == "")
+        reason[hit] = why
+
+    fail((db.buffer_bw > 64 * db.buffer_kb)
+         | ((db.buffer_kb >= 1024) & (db.buffer_bw > 2048)), "sram_infeasible")
+    tsv_area = np.where(db.dram_on,
+                        C.tsv_area_mm2(db.dram_bw_Bps_per_reticle), 0.0)
+    fail(db.dram_on & (tsv_area / np.maximum(db.reticle_area_mm2, 1e-9)
+                       > C.TSV_AREA_RATIO_MAX), "tsv_stress")
+    fail(db.reticle_area_mm2 > C.RETICLE_AREA_MM2, "reticle_area")
+    fail(db.wafer_area_mm2 > C.WAFER_AREA_MM2, "wafer_area")
+
+    # --- yield resolution for the survivors ---------------------------------
+    spares = np.zeros(N, np.int64)
+    wy = np.zeros(N)
+    live = reason == ""
+    if live.any():
+        idx = np.flatnonzero(live)
+        side = np.sqrt(db.core_area_mm2[idx])       # core_dims_mm: square
+        s_res, w_res = min_spares_for_target_batch(
+            side, side, db.core_h[idx], db.core_w[idx],
+            db.core_h[idx] * side, db.core_w[idx] * side,
+            tsv_area[idx], db.n_reticles[idx], db.integ_code[idx] == 1,
+            target=YIELD_TARGET)
+        spares[idx] = s_res
+        wy[idx] = w_res
+        fail(live & (spares < 0), "yield")
+
+        # --- re-check areas / static power with the spare columns added -----
+        phy = (4.0 * db.inter_reticle_bw_Bps) * 8e-9 * np.where(
+            db.integ_code == 1, C.IR_AREA_UM2_PER_GBPS["infosow"],
+            C.IR_AREA_UM2_PER_GBPS["die_stitching"]) * 1e-6
+        base2 = (db.core_w + np.maximum(spares, 0)) * db.core_h \
+            * db.core_area_mm2 + phy
+        r_area2 = np.where(
+            db.dram_on,
+            base2 / np.maximum(1.0 - C.tsv_area_ratio(db.dram_bw_tbps), 1e-3),
+            base2)
+        fail((reason == "") & (r_area2 > C.RETICLE_AREA_MM2),
+             "reticle_area_with_spares")
+        fail((reason == "") & (db.n_reticles * r_area2 > C.WAFER_AREA_MM2),
+             "wafer_area_with_spares")
+
+        dram_gb2 = np.where(db.dram_on,
+                            C.dram_gb_at_bw(db.dram_bw_tbps) * r_area2 / 100.0,
+                            0.0)
+        static2 = C.core_static_w(db.mac, db.buffer_kb) * db.total_cores \
+            + C.DRAM_STATIC_W_PER_GB * dram_gb2 * db.n_reticles
+        fail((reason == "") & (static2 > peak_power_w), "static_power")
+
+    out: List[ValidationResult] = []
+    for i, d in enumerate(designs):
+        if reason[i]:
+            out.append(ValidationResult(False, str(reason[i])))
+        else:
+            out.append(ValidationResult(
+                True, "", dataclasses.replace(d, spares_per_row=int(spares[i])),
+                float(wy[i])))
+    return out

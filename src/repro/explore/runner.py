@@ -5,11 +5,14 @@ The MFMOBO / MOBO / random-search loops that used to live inline in
 machine: `LoopConfig` (strategy + budgets + schedule, validated up front so
 budget-overshooting configurations fail loudly) drives `step()` transitions
 over a picklable `LoopState` (the rng generator, the GP training sets, the
-trace, the schedule position). Because the GP surrogates are *refit from
-the training set every iteration* (deterministically — fixed init, jitted
-Adam), the state is tiny and a checkpoint written at any step boundary
-resumes bit-identically: the continuation consumes the identical rng
-stream and refits the identical models, so a resumed trace equals the
+trace, the schedule position). The compiled optimizer hot path (jitted GP
+refit, scanned q-EHVI acquisition — DESIGN.md §10) is a pure function of
+that host-side state: LoopState holds only NumPy arrays / Python scalars,
+never device buffers or fitted GPs. Because the surrogates are *refit from
+the training set every iteration* (deterministically — fixed init, one
+jitted Adam scan), the state is tiny and a checkpoint written at any step
+boundary resumes bit-identically: the continuation consumes the identical
+rng stream and refits the identical models, so a resumed trace equals the
 uninterrupted one at a fixed seed (pinned by tests/test_campaign.py).
 
 `repro.core.mfmobo.run_mfmobo/run_mobo/run_random` are thin wrappers over
@@ -152,7 +155,10 @@ class ExplorationLoop:
         traffic (hits/misses/entries added) to the stage on the trace."""
         from repro.core.evaluator import eval_cache_stats
         s0 = eval_cache_stats()
-        ys = obj.eval_many(list(designs))
+        # host-side floats only: whatever array scalars the objective hands
+        # back must not leak device buffers into the picklable LoopState
+        ys = [(float(t), float(p))
+              for t, p in obj.eval_many(list(designs))]
         s1 = eval_cache_stats()
         sc = self.state.trace.stage_cache.setdefault(
             stage, {"hits": 0, "misses": 0, "entries_added": 0})

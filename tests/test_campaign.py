@@ -344,18 +344,22 @@ def test_valid_candidates_raises_when_space_rejects(monkeypatch):
     import repro.core.mfmobo as M
 
     rng = np.random.default_rng(0)
-    monkeypatch.setattr(M, "validate", lambda d: types.SimpleNamespace(
-        ok=False, design=d))
-    with pytest.raises(RuntimeError, match="valid candidates"):
+    monkeypatch.setattr(M, "validate_batch", lambda ds: [
+        types.SimpleNamespace(ok=False, design=d) for d in ds])
+    with pytest.raises(RuntimeError, match="valid candidates") as ei:
         M._valid_candidates(rng, 8, max_tries=2)
+    assert "acceptance rate" in str(ei.value)    # satellite: rate surfaced
 
     # sparse acceptance still tops up to exactly n
     calls = {"n": 0}
 
-    def sparse(d):
-        calls["n"] += 1
-        return types.SimpleNamespace(ok=calls["n"] % 3 == 0, design=d)
-    monkeypatch.setattr(M, "validate", sparse)
+    def sparse_batch(ds):
+        out = []
+        for d in ds:
+            calls["n"] += 1
+            out.append(types.SimpleNamespace(ok=calls["n"] % 3 == 0, design=d))
+        return out
+    monkeypatch.setattr(M, "validate_batch", sparse_batch)
     xs, ds = M._valid_candidates(np.random.default_rng(1), 8, max_tries=8)
     assert len(xs) == len(ds) == 8
 
