@@ -12,6 +12,11 @@ per-fidelity-stage cache hit-rates.
 """
 from __future__ import annotations
 
+import dataclasses
+import os
+import pickle
+import shutil
+import tempfile
 import time
 from typing import Dict
 
@@ -49,6 +54,95 @@ def method_specs(workload: str, seed: int, *, N0: int, N1: int, cand: int,
                              "epochs": 5 if quick else 15}),
             n_evals_f0=N0, n_evals_f1=N1, q=q, n_candidates=cand,
             seed=seed),
+    }
+
+
+def fleet_probe(quick: bool, gnn_params) -> Dict:
+    """Fleet-scale grid execution probe (DESIGN.md §11): the fig8
+    method×seed grid run three ways —
+
+        serial-cold  one fresh worker process per campaign, no shared
+                     caches: what the grid costs when each campaign is an
+                     independent cold job (the pre-fleet deployment shape);
+        fleet-cold   `workers` persistent processes sharing the on-disk
+                     eval cache and the XLA compilation cache;
+        fleet-warm   the same fleet re-run against the now-populated
+                     persistent caches (fresh checkpoints, so every
+                     campaign genuinely re-evaluates) — measures the
+                     cross-campaign eval-cache hit-rate.
+    """
+    from repro.explore.fleet import FleetSpec, run_fleet
+
+    wl = GPT_BENCHMARKS[0]
+    seeds = (0,) if quick else (0, 1, 2)
+    N0 = 8 if quick else 14
+    N1 = 10 if quick else 18
+    cand = 48 if quick else 96
+    q = 2 if quick else 4
+    workers = 2 if quick else 4
+
+    root = tempfile.mkdtemp(prefix="fig8fleet-")
+    params_path = os.path.join(root, "gnn_params.pkl")
+    with open(params_path, "wb") as f:
+        pickle.dump(gnn_params, f)
+    campaigns = []
+    for seed in seeds:
+        for spec in method_specs(wl.name, seed, N0=N0, N1=N1, cand=cand,
+                                 q=q, quick=quick).values():
+            fid = dataclasses.replace(spec.fidelity,
+                                      params_path=params_path)
+            campaigns.append(dataclasses.replace(
+                spec, name="fleet-" + spec.name, fidelity=fid))
+    try:
+        # serial-cold baseline: a fresh spawned process per campaign,
+        # nothing shared — every campaign pays imports + XLA compiles
+        t0 = time.time()
+        serial_evals = 0
+        for i, c in enumerate(campaigns):
+            r = run_fleet(FleetSpec(name=f"serial-{i}", campaigns=(c,),
+                                    workers=1))
+            if r.errors:
+                raise RuntimeError(f"serial baseline failed: {r.errors}")
+            serial_evals += r.n_evals
+        serial_wall = time.time() - t0
+
+        fs = FleetSpec(
+            name="fig8-fleet", campaigns=tuple(campaigns), workers=workers,
+            cache_dir=os.path.join(root, "evalcache"),
+            compile_cache_dir=os.path.join(root, "xlacache"),
+            checkpoint_dir=os.path.join(root, "ck"), checkpoint_every=2)
+        cold = run_fleet(fs)
+        if cold.errors:
+            raise RuntimeError(f"fleet run failed: {cold.errors}")
+        # fresh checkpoint dir: same campaigns recompute their evaluations
+        # against the persistent eval cache the cold pass populated
+        warm = run_fleet(dataclasses.replace(
+            fs, name="fig8-fleet-warm",
+            checkpoint_dir=os.path.join(root, "ck-warm")))
+        if warm.errors:
+            raise RuntimeError(f"warm fleet run failed: {warm.errors}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    f0 = {"hits": 0, "misses": 0}
+    for c in warm.campaigns:
+        sc = (c or {}).get("stage_cache", {}).get("f0", {})
+        f0["hits"] += sc.get("hits", 0)
+        f0["misses"] += sc.get("misses", 0)
+    warm_hit = f0["hits"] / max(f0["hits"] + f0["misses"], 1)
+    return {
+        "workers": workers,
+        "n_campaigns": len(campaigns),
+        "n_evals": cold.n_evals,
+        "serial_cold_wall_s": serial_wall,
+        "fleet_wall_s": cold.wall_s,
+        "fleet_warm_wall_s": warm.wall_s,
+        "fleet_speedup": serial_wall / max(cold.wall_s, 1e-9),
+        "fleet_warm_speedup": serial_wall / max(warm.wall_s, 1e-9),
+        "fleet_candidates_per_sec": cold.fleet_candidates_per_sec,
+        "fleet_warm_candidates_per_sec": warm.fleet_candidates_per_sec,
+        "warm_f0_hit_rate": warm_hit,
+        "crashes": cold.crashes + warm.crashes,
     }
 
 
@@ -134,6 +228,9 @@ def run(quick: bool = False) -> Dict:
     out["campaigns"] = sorted(s.name for s in method_specs(
         wl.name, seeds[0], N0=N0, N1=N1, cand=cand, q=q,
         quick=quick).values())
+    print("\n  fleet probe: serial-cold vs shared-cache workers "
+          "(repro.explore.fleet)...")
+    out["fleet"] = fleet_probe(quick, gnn)
     save_artifact("fig8_explorer", out)
     print("\n=== Fig.8: explorer efficiency (avg hypervolume) ===")
     for k in ("random", "mobo", "mfmobo"):
@@ -149,6 +246,14 @@ def run(quick: bool = False) -> Dict:
     for stage, sc in out["stage_cache"].items():
         print(f"eval cache [{stage}]: {sc['hits']}/{sc['hits']+sc['misses']}"
               f" hits ({100*sc['hit_rate']:.0f}%)")
+    fl = out["fleet"]
+    print(f"fleet [{fl['workers']} workers, {fl['n_campaigns']} campaigns]: "
+          f"serial-cold {fl['serial_cold_wall_s']:.0f}s -> fleet "
+          f"{fl['fleet_wall_s']:.0f}s ({fl['fleet_speedup']:.1f}x, "
+          f"{fl['fleet_candidates_per_sec']:.2f} candidates/sec); warm "
+          f"re-run {fl['fleet_warm_wall_s']:.0f}s "
+          f"({fl['fleet_warm_speedup']:.1f}x) with "
+          f"{100*fl['warm_f0_hit_rate']:.0f}% f0 cache hits")
     return out
 
 

@@ -41,7 +41,7 @@ _TRACKED_KEYS = ("candidates_per_sec", "n_evaluations", "wall_s", "q",
                  "hv_sim_final", "calibration", "batched_candidates_per_sec",
                  "n_points", "workload", "eval_cache",
                  "serving_front", "goodput_best", "slo", "explorer",
-                 "hetero_serving", "campaigns", "stage_cache")
+                 "hetero_serving", "campaigns", "stage_cache", "fleet")
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_dse.json")
@@ -246,6 +246,19 @@ def main():
         traceback.print_exc()
         optimizer = {"status": "failed"}
         failures.append("proposal_rate")
+
+    # fleet acceptance floors (DESIGN.md §11): the fig8 fleet probe must
+    # sustain a minimum evaluated-candidate rate and the warm second pass
+    # over the persistent eval cache must actually hit it
+    fleet = (records.get("fig8", {}).get("metrics", {}) or {}).get("fleet")
+    if fleet:
+        if fleet["fleet_candidates_per_sec"] < 0.2:
+            print("fleet candidates/sec below the 0.2/sec acceptance floor")
+            failures.append("fleet_candidates_per_sec_floor")
+        if fleet["warm_f0_hit_rate"] <= 0.5:
+            print("warm-fleet f0 cache hit-rate below the 50% floor "
+                  f"({100 * fleet['warm_f0_hit_rate']:.0f}%)")
+            failures.append("fleet_warm_cache_hit_rate_floor")
 
     path = write_bench_json(records, args.quick, speedup, optimizer)
     print(f"wrote {path}")

@@ -25,12 +25,19 @@ explorer visits to the same point never recompile or re-evaluate
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+import jax
 import numpy as np
 
 from repro.core import components as C
+from repro.core.evalcache import (
+    DiskSegmentEvalCache,
+    EvalCacheBackend,
+    InMemoryEvalCache,
+)
 from repro.core.chunk_eval import evaluate_step
 from repro.core.compiler import (
     ChunkGraph,
@@ -70,69 +77,128 @@ def _wafers_for_budget_batch(geom: DesignBatch, wl: LLMWorkload) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# cross-call eval cache (DESIGN.md §6) — replaces the old per-call
+# cross-call eval cache (DESIGN.md §6/§11) — replaces the old per-call
 # compile_cache: WSCDesign and LLMWorkload are frozen/hashable, so the
-# full evaluation outcome is memoized across explorer iterations.
+# full evaluation outcome is memoized across explorer iterations. The
+# store itself is a pluggable `EvalCacheBackend` (repro.core.evalcache):
+# the default is the bounded in-memory LRU; fleet workers install a
+# `DiskSegmentEvalCache` so concurrent workers and successive campaigns
+# share evaluations through a common cache directory.
 # ---------------------------------------------------------------------------
 
-_EVAL_CACHE: Dict[Tuple, EvalResult] = {}
 _EVAL_CACHE_MAX = 100_000
-_CACHE_STATS = {"hits": 0, "misses": 0}
+_BACKEND: EvalCacheBackend = InMemoryEvalCache(max_entries=_EVAL_CACHE_MAX)
 
 # GNN params are unhashable pytrees, so cache keys carry an explicit
-# monotonic version token per params object. The params are pinned (strong
-# ref) while tokenized, so a live object's id cannot be reused; once a pin
-# is evicted its token is *retired* — the counter never hands it out again —
-# so a new object reusing the freed id gets a fresh token and can never
-# alias the old object's cache entries (the failure mode of the previous
-# id()-keyed scheme).
-_PARAMS_TOKENS: Dict[int, Tuple[int, object]] = {}   # id -> (token, params)
+# version element per params object. Two mechanisms, one pin table:
+#
+#  * `gnn_params_token` — process-local monotonic counter. The params are
+#    pinned (strong ref) while tokenized, so a live object's id cannot be
+#    reused; once a pin is evicted its token is *retired* — the counter
+#    never hands it out again — so a new object reusing the freed id can
+#    never alias the old object's cache entries (the failure mode of the
+#    previous id()-keyed scheme).
+#  * `gnn_params_digest` — content hash of the pytree's array leaves,
+#    memoized on the same pin. This is what cache KEYS use: digests are
+#    stable across processes (required by the shared disk backend, where a
+#    per-process counter would alias entries between workers) and across
+#    re-pins, while calibration replacing the pytree still lands in a
+#    fresh namespace because the content changed.
+_PARAMS_TOKENS: Dict[int, Tuple[int, str, object]] = {}
 _PARAMS_TOKENS_MAX = 16
 _params_counter = itertools.count(1)
 
 
-def gnn_params_token(gnn_params) -> Optional[int]:
-    """Stable monotonic version token for a params pytree (None -> None).
-    A params object keeps its token for as long as it stays pinned; calling
-    this after mutating-and-replacing params (e.g. online calibration)
-    naturally yields a new token for the new object."""
-    if gnn_params is None:
-        return None
+def _digest_params(gnn_params) -> str:
+    h = hashlib.sha1()
+    leaves, _ = jax.tree_util.tree_flatten(gnn_params)
+    for leaf in leaves:
+        a = np.asarray(leaf)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
+def _pin_params(gnn_params) -> Tuple[int, str]:
     pid = id(gnn_params)
     entry = _PARAMS_TOKENS.get(pid)
     if entry is None:
         if len(_PARAMS_TOKENS) >= _PARAMS_TOKENS_MAX:
             _PARAMS_TOKENS.pop(next(iter(_PARAMS_TOKENS)))
-        entry = (next(_params_counter), gnn_params)
+        entry = (next(_params_counter), _digest_params(gnn_params),
+                 gnn_params)
         _PARAMS_TOKENS[pid] = entry
-    return entry[0]
+    return entry[0], entry[1]
+
+
+def gnn_params_token(gnn_params) -> Optional[int]:
+    """Process-local monotonic version token for a params pytree
+    (None -> None). A params object keeps its token for as long as it stays
+    pinned; calling this after mutating-and-replacing params (e.g. online
+    calibration) naturally yields a new token for the new object."""
+    if gnn_params is None:
+        return None
+    return _pin_params(gnn_params)[0]
+
+
+def gnn_params_digest(gnn_params) -> Optional[str]:
+    """Content digest of a params pytree (None -> None): stable across
+    processes and runs, so it is the params element of eval-cache keys —
+    a worker fleet sharing a disk cache agrees on the namespace of every
+    entry (DESIGN.md §11)."""
+    if gnn_params is None:
+        return None
+    return _pin_params(gnn_params)[1]
 
 
 def _cache_key(design: WSCDesign, wl: LLMWorkload, fidelity: str,
                n_wafers: int, max_strategies: int, gnn_params) -> Tuple:
     return (design, wl, fidelity, n_wafers, max_strategies,
-            gnn_params_token(gnn_params))
+            gnn_params_digest(gnn_params))
 
 
-def _cache_put(key: Tuple, value: EvalResult) -> EvalResult:
-    if len(_EVAL_CACHE) >= _EVAL_CACHE_MAX:
-        _EVAL_CACHE.pop(next(iter(_EVAL_CACHE)))
-    _EVAL_CACHE[key] = value
-    return value
+def get_eval_cache_backend() -> EvalCacheBackend:
+    return _BACKEND
+
+
+def set_eval_cache_backend(backend: EvalCacheBackend) -> EvalCacheBackend:
+    """Install a cache backend (e.g. a fleet worker pointing a
+    `DiskSegmentEvalCache` at the shared cache directory). Returns the
+    previous backend so callers can restore it."""
+    global _BACKEND
+    prev = _BACKEND
+    _BACKEND = backend
+    return prev
+
+
+def configure_eval_cache(cache_dir: Optional[str] = None,
+                         max_entries: int = _EVAL_CACHE_MAX
+                         ) -> EvalCacheBackend:
+    """Convenience: install the disk-segment backend rooted at `cache_dir`
+    (shared, persistent), or a fresh bounded in-memory LRU when
+    `cache_dir` is None."""
+    if cache_dir is None:
+        set_eval_cache_backend(InMemoryEvalCache(max_entries=max_entries))
+    else:
+        set_eval_cache_backend(
+            DiskSegmentEvalCache(cache_dir, max_entries=max_entries))
+    return _BACKEND
 
 
 def clear_eval_cache() -> None:
-    _EVAL_CACHE.clear()
+    _BACKEND.clear()
     _PARAMS_TOKENS.clear()
-    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
 
 
 def eval_cache_stats() -> Dict[str, int]:
     # `entries` == `size` (live cache entries); both names kept — `size`
     # predates campaign reporting, `entries` is the documented key campaign
-    # traces diff per fidelity stage (DESIGN.md §9)
-    return dict(_CACHE_STATS, size=len(_EVAL_CACHE),
-                entries=len(_EVAL_CACHE))
+    # traces diff per fidelity stage (DESIGN.md §9). Backends add
+    # `evictions` (LRU) and, for the disk backend, segment/merge counters.
+    s = _BACKEND.stats()
+    s["size"] = s["entries"]
+    return s
 
 
 # ---------------------------------------------------------------------------
@@ -149,11 +215,9 @@ def evaluate_design(design: WSCDesign, wl: LLMWorkload,
     nw = n_wafers if n_wafers is not None else wafers_for_budget(design, wl)
     key = _cache_key(design, wl, backend.name, nw, max_strategies,
                      gnn_params)
-    hit = _EVAL_CACHE.get(key)
+    hit = _BACKEND.get(key)
     if hit is not None:
-        _CACHE_STATS["hits"] += 1
         return hit
-    _CACHE_STATS["misses"] += 1
 
     strategies = enumerate_strategies(design, wl, n_wafers=nw)
     strategies = sorted(strategies, key=_strategy_order)[:max_strategies]
@@ -180,7 +244,7 @@ def evaluate_design(design: WSCDesign, wl: LLMWorkload,
     if best is None:
         best = EvalResult(0.0, float("inf"), None, None, nw, False,
                           "no_feasible_strategy")
-    return _cache_put(key, best)
+    return _BACKEND.put(key, best)
 
 
 # ---------------------------------------------------------------------------
@@ -212,15 +276,13 @@ def evaluate_design_batch(designs: Sequence[WSCDesign], wl: LLMWorkload,
     keys = [_cache_key(d, wl, backend.name, int(nw[i]), max_strategies,
                        gnn_params)
             for i, d in enumerate(designs)]
-    results: List[Optional[EvalResult]] = [_EVAL_CACHE.get(k) for k in keys]
+    results: List[Optional[EvalResult]] = [_BACKEND.get(k) for k in keys]
     todo = [i for i, r in enumerate(results) if r is None]
-    _CACHE_STATS["hits"] += len(designs) - len(todo)
-    _CACHE_STATS["misses"] += len(todo)
     if todo:
         fresh = backend.evaluate_batch(geom0.take(np.asarray(todo)), wl,
                                        nw[todo], max_strategies, gnn_params)
         for i, r in zip(todo, fresh):
-            results[i] = _cache_put(keys[i], r)
+            results[i] = _BACKEND.put(keys[i], r)
     return results            # type: ignore[return-value]
 
 
@@ -280,8 +342,10 @@ def batched_objectives(wl: LLMWorkload, fidelity: Fidelity = "analytical",
 
 __all__ = [
     "EvalResult", "Fidelity", "batched_objectives", "clear_eval_cache",
-    "eval_cache_stats", "evaluate_design", "evaluate_design_batch",
-    "evaluate_objectives", "evaluate_objectives_batch",
-    "evaluate_serving_batch", "get_backend", "gnn_params_token",
-    "registered_backends", "serving_objectives", "wafers_for_budget",
+    "configure_eval_cache", "eval_cache_stats", "evaluate_design",
+    "evaluate_design_batch", "evaluate_objectives",
+    "evaluate_objectives_batch", "evaluate_serving_batch",
+    "get_backend", "get_eval_cache_backend", "gnn_params_digest",
+    "gnn_params_token", "registered_backends", "serving_objectives",
+    "set_eval_cache_backend", "wafers_for_budget",
 ]

@@ -7,7 +7,14 @@ One entry point for the paper's exploration experiments (DESIGN.md §9):
     result = Campaign(spec).run(checkpoint_path="run.ckpt")
     result = Campaign.resume("run.ckpt").run()        # continue a run
 
-CLI: ``python -m repro.explore <spec>.json [--resume CKPT]``.
+Fleets fan a grid of campaigns across worker processes sharing a
+persistent eval cache (DESIGN.md §11):
+
+    from repro.explore import FleetSpec, run_fleet
+    result = run_fleet(FleetSpec.from_json("grid.json"))
+
+CLI: ``python -m repro.explore <spec>.json [--resume CKPT]`` or
+``python -m repro.explore fleet grid.json``.
 """
 from repro.explore.campaign import (  # noqa: F401
     Campaign,
@@ -29,9 +36,16 @@ from repro.explore.objectives import (  # noqa: F401
     ServingObjective,
     as_objective,
 )
+from repro.explore.fleet import (  # noqa: F401
+    FleetResult,
+    FleetSpec,
+    expand_grid,
+    run_fleet,
+)
 from repro.explore.runner import (  # noqa: F401
     ExplorationLoop,
     LoopConfig,
     LoopState,
+    PendingBatch,
     STRATEGIES,
 )

@@ -8,6 +8,9 @@
 
     # parse + validate shipped specs without running anything (CI)
     python -m repro.explore --validate examples/campaigns/*.json
+
+    # run a campaign FLEET (grid of specs across worker processes)
+    python -m repro.explore fleet examples/campaigns/fleet_quick_grid.json
 """
 from __future__ import annotations
 
@@ -51,7 +54,50 @@ def _summarize(result) -> None:
               f"{p['describe']}")
 
 
+def _fleet_main(argv: List[str]) -> int:
+    """`python -m repro.explore fleet grid.json [...]` — run a FleetSpec
+    across worker processes (repro.explore.fleet, DESIGN.md §11)."""
+    from repro.explore.fleet import FleetSpec, run_fleet
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.explore fleet",
+        description="Fan a grid of campaign specs across worker "
+                    "processes sharing a persistent eval cache.")
+    ap.add_argument("spec", help="fleet spec JSON path")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="override the spec's worker count")
+    ap.add_argument("--validate", action="store_true",
+                    help="parse + validate the fleet spec, run nothing")
+    ap.add_argument("--out", help="result JSON path "
+                                  "(default fleet_<name>.result.json)")
+    args = ap.parse_args(argv)
+    import dataclasses as _dc
+    fspec = FleetSpec.from_json(args.spec)
+    if args.workers is not None:
+        fspec = _dc.replace(fspec, workers=args.workers)
+    if args.validate:
+        fspec.validate()
+        print(f"OK {args.spec}: fleet {fspec.name!r} — "
+              f"{len(fspec.campaigns)} campaigns x {fspec.workers} workers")
+        return 0
+    res = run_fleet(fspec, verbose=True)
+    out = args.out or f"fleet_{fspec.name.replace(' ', '-')}.result.json"
+    res.save(out)
+    done = sum(1 for c in res.campaigns if c)
+    print(f"\n=== fleet {fspec.name!r}: {done}/{len(res.campaigns)} "
+          f"campaigns on {fspec.workers} workers ===")
+    print(f"evaluations: {res.n_evals}  wall: {res.wall_s:.1f}s  "
+          f"({res.fleet_candidates_per_sec:.2f} candidates/sec)  "
+          f"crashes: {res.crashes}")
+    for err in res.errors:
+        print(f"ERROR {err}")
+    print(f"result -> {out}")
+    return 1 if res.errors else 0
+
+
 def main(argv: Optional[List[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] == "fleet":
+        return _fleet_main(argv[1:])
     ap = argparse.ArgumentParser(
         prog="python -m repro.explore",
         description="Run, resume, or validate DSE campaign specs "
@@ -78,7 +124,18 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.validate:
         if not args.spec:
             ap.error("--validate needs at least one spec path")
+        import json
         for path in args.spec:
+            with open(path) as f:
+                raw = json.load(f)
+            if "campaigns" in raw or "grid" in raw:  # fleet-shaped spec
+                from repro.explore.fleet import FleetSpec
+                fspec = FleetSpec.from_json(path)
+                fspec.validate()
+                print(f"OK {path}: fleet {fspec.name!r} — "
+                      f"{len(fspec.campaigns)} campaigns x "
+                      f"{fspec.workers} workers")
+                continue
             spec = CampaignSpec.from_json(path).validate()
             cfg = spec.loop_config()
             print(f"OK {path}: {spec.name!r} ({spec.strategy} on "

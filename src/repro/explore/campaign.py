@@ -150,6 +150,9 @@ class CampaignSpec:
     serving: Optional[ServingSpec] = None
     hetero: Optional[HeteroSpec] = None
     checkpoint_every: int = 0                  # steps; 0 = final only
+    checkpoint_keep: int = 3                   # retained ckpt generations
+    async_depth: int = 0                       # in-flight eval batches;
+                                               # 0 = synchronous loop
 
     def __post_init__(self):
         if not self.objectives:
@@ -230,7 +233,7 @@ class CampaignSpec:
             strategy=self.strategy, N0=self.n_evals_f0, N1=self.n_evals_f1,
             d0=f.d0, d1=f.d1, k=f.k, q=self.q,
             n_candidates=self.n_candidates, peak_power=self.peak_power_w,
-            seed=self.seed)
+            seed=self.seed, async_depth=self.async_depth)
 
     # -- serialization -----------------------------------------------------
 
@@ -252,6 +255,8 @@ class CampaignSpec:
             "max_strategies": self.max_strategies,
             "peak_power_w": self.peak_power_w,
             "checkpoint_every": self.checkpoint_every,
+            "checkpoint_keep": self.checkpoint_keep,
+            "async_depth": self.async_depth,
         }
         if self.workload_overrides:
             d["workload_overrides"] = dict(self.workload_overrides)
@@ -492,7 +497,8 @@ class Campaign:
             extra["calibration_records"] = list(self.calibrator.records)
         elif self.gnn_params is not None:
             extra["gnn_params"] = self.gnn_params
-        self.loop.save_state(path, extra=extra)
+        self.loop.save_state(path, extra=extra,
+                             keep=self.spec.checkpoint_keep)
 
     def run(self, checkpoint_path: Optional[str] = None,
             checkpoint_every: Optional[int] = None,

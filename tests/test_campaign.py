@@ -84,10 +84,17 @@ def test_spec_rejects_unknowns_and_bad_refs():
 
 
 def test_shipped_example_specs_parse_and_validate():
+    from repro.explore import FleetSpec
     paths = sorted(glob.glob(os.path.join(REPO, "examples", "campaigns",
                                           "*.json")))
     assert len(paths) >= 4, "expected shipped example campaign specs"
     for p in paths:
+        with open(p) as f:
+            raw = json.load(f)
+        if "campaigns" in raw or "grid" in raw:       # fleet grid spec
+            fleet = FleetSpec.from_json(p).validate()
+            assert len(fleet.campaigns) > 0
+            continue
         spec = CampaignSpec.from_json(p).validate()
         assert spec.loop_config().total_evals() > 0
 
