@@ -108,6 +108,7 @@ def fleet_probe(quick: bool, gnn_params) -> Dict:
 
         fs = FleetSpec(
             name="fig8-fleet", campaigns=tuple(campaigns), workers=workers,
+            host_devices=2,          # shard eval batches across 2 XLA lanes
             cache_dir=os.path.join(root, "evalcache"),
             compile_cache_dir=os.path.join(root, "xlacache"),
             checkpoint_dir=os.path.join(root, "ck"), checkpoint_every=2)
@@ -130,8 +131,19 @@ def fleet_probe(quick: bool, gnn_params) -> Dict:
         f0["hits"] += sc.get("hits", 0)
         f0["misses"] += sc.get("misses", 0)
     warm_hit = f0["hits"] / max(f0["hits"] + f0["misses"], 1)
+    # per-lane evaluator utilization, aggregated over every worker's
+    # campaigns (each worker reports its process-local lane counters)
+    lanes = {"n_lanes": 0, "sharded_calls": 0, "rows_sharded": 0,
+             "jit_calls": 0, "rows_jit": 0}
+    for c in list(cold.campaigns) + list(warm.campaigns):
+        el = (c or {}).get("eval_lanes") or {}
+        lanes["n_lanes"] = max(lanes["n_lanes"], el.get("n_lanes", 0))
+        for k in ("sharded_calls", "rows_sharded", "jit_calls", "rows_jit"):
+            lanes[k] += el.get(k, 0)
     return {
         "workers": workers,
+        "host_devices": 2,
+        "eval_lanes": lanes,
         "n_campaigns": len(campaigns),
         "n_evals": cold.n_evals,
         "serial_cold_wall_s": serial_wall,
@@ -164,9 +176,11 @@ def run(quick: bool = False) -> Dict:
     # acquire) for every pow2 capacity bucket the campaigns will touch, so
     # the timed wall below measures proposal throughput, not XLA compiles
     t0 = time.time()
-    n_buckets = warm_optimizer_kernels(max(N0, N1), n_candidates=cand, q=q)
-    print(f"  optimizer warmup: {n_buckets} shape buckets compiled in "
-          f"{time.time()-t0:.1f}s")
+    n_buckets = warm_optimizer_kernels(max(N0, N1), n_candidates=cand, q=q,
+                                       workload=wl,
+                                       n_designs_max=max(N0, N1))
+    print(f"  optimizer+evaluator warmup: {n_buckets} shape buckets "
+          f"compiled in {time.time()-t0:.1f}s")
     t_all = time.time()
 
     def hv_under_sim(trace):

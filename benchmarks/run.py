@@ -41,7 +41,8 @@ _TRACKED_KEYS = ("candidates_per_sec", "n_evaluations", "wall_s", "q",
                  "hv_sim_final", "calibration", "batched_candidates_per_sec",
                  "n_points", "workload", "eval_cache",
                  "serving_front", "goodput_best", "slo", "explorer",
-                 "hetero_serving", "campaigns", "stage_cache", "fleet")
+                 "hetero_serving", "campaigns", "stage_cache", "fleet",
+                 "eval_lanes")
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_dse.json")
@@ -65,9 +66,15 @@ def measure_batch_speedup(n_designs: int = 64, max_strategies: int = 24,
     from repro.core.noc_gnn import init_gnn
     from repro.core.workload import GPT_BENCHMARKS
 
+    from repro.core import eval_compiled
+
     wl = GPT_BENCHMARKS[0]
     designs = sample_valid_designs(n_designs, seed=1234)
     gnn_params = init_gnn(jax.random.PRNGKey(0))
+    # pre-compile the analytical evaluator buckets (DESIGN.md §12) so the
+    # timed analytical batch measures the jitted pipeline, not its compile
+    eval_compiled.warm_evaluator_kernels(wl, n_designs_max=n_designs,
+                                         max_strategies=max_strategies)
     # warm the jitted GNN kernels so the probe times steady-state math, not
     # one-off XLA compilation (which the serial path amortizes too). The
     # warm-up must run the FULL design batch: smaller prefixes miss the
@@ -153,7 +160,57 @@ def measure_proposal_rate(n_obs: int = 16, n_candidates: int = 96,
     }
 
 
-def write_bench_json(records, quick: bool, speedup, optimizer=None):
+def measure_fused_iteration_rate(n_obs: int = 16, n_candidates: int = 96,
+                                 q: int = 4, iters: int = 20):
+    """Fused-iteration acceptance probe (DESIGN.md §12): one synchronous
+    MFMOBO f1 iteration end to end — GP pair refit, scanned q-EHVI acquire,
+    candidate decode, and compiled analytical evaluation of the q picks
+    gathered by device-resident indices (no host sync between proposal and
+    evaluation). Kernels (optimizer AND evaluator) are warmed first, so the
+    probe times the steady-state fused loop."""
+    import numpy as np
+
+    from repro.core import eval_compiled
+    from repro.core.design_space import DIMS, decode_batch
+    from repro.core.evaluator import clear_eval_cache, evaluate_pool_fused
+    from repro.core.mfmobo import (_acquire_batch_device, _fit_models,
+                                   hv_ref, obj_space, warm_optimizer_kernels)
+    from repro.core.workload import GPT_BENCHMARKS
+
+    if not eval_compiled.enabled():
+        return {"status": "disabled"}
+    wl = GPT_BENCHMARKS[0]
+    warm_optimizer_kernels(n_obs, n_candidates=n_candidates, q=q,
+                           workload=wl, n_designs_max=q)
+    rng = np.random.default_rng(7)
+    X = rng.random((n_obs, len(DIMS)))
+    Y = np.stack([1e3 * (1.0 + rng.random(n_obs)),
+                  1e3 * (2.0 + rng.random(n_obs))], 1)
+    ev = obj_space([tuple(y) for y in Y])
+    ref = hv_ref(15000.0)
+    cands = rng.random((iters, n_candidates, len(DIMS)))
+    clear_eval_cache()
+    t0 = time.perf_counter()
+    for i in range(iters):
+        models = _fit_models(X, Y)
+        cand_d = decode_batch(cands[i])
+        js_dev = _acquire_batch_device(models, cands[i], ev, ref, q=q)
+        evaluate_pool_fused(cand_d, wl, js_dev, q)
+    wall = time.perf_counter() - t0
+    return {
+        "n_obs": n_obs,
+        "n_candidates": n_candidates,
+        "q": q,
+        "iters": iters,
+        "wall_s": wall,
+        "iterations_per_sec": iters / max(wall, 1e-9),
+        "candidates_per_sec": iters * q / max(wall, 1e-9),
+        "eval_lanes": eval_compiled.lane_stats(),
+    }
+
+
+def write_bench_json(records, quick: bool, speedup, optimizer=None,
+                     fused=None):
     # merge into the existing file so an `--only` subset run refreshes its
     # own records without wiping the other benchmarks' tracked history
     merged = {}
@@ -169,6 +226,7 @@ def write_bench_json(records, quick: bool, speedup, optimizer=None):
         "quick": quick,
         "batch_eval": speedup,
         "optimizer": optimizer or {"status": "failed"},
+        "fused_iteration": fused or {"status": "failed"},
         "benchmarks": merged,
     }
     with open(BENCH_JSON, "w") as f:
@@ -247,6 +305,28 @@ def main():
         optimizer = {"status": "failed"}
         failures.append("proposal_rate")
 
+    print(f"\n{'='*70}\nMeasuring fused propose->evaluate iteration rate"
+          f"\n{'='*70}", flush=True)
+    try:
+        fused = measure_fused_iteration_rate()
+        if fused.get("status") == "disabled":
+            print("compiled evaluator disabled (REPRO_COMPILED_EVAL=0); "
+                  "fused probe skipped")
+        else:
+            print(f"fused       : {fused['iters']} fused iterations "
+                  f"(refit + q={fused['q']} acquire + compiled analytical "
+                  f"eval) in {fused['wall_s']:.3f}s -> "
+                  f"{fused['candidates_per_sec']:.1f} evaluated "
+                  f"candidates/sec")
+            if fused["candidates_per_sec"] < 8.0:
+                print("fused-iteration candidates/sec below the 8/sec "
+                      "acceptance floor")
+                failures.append("fused_iteration_rate_floor")
+    except Exception:
+        traceback.print_exc()
+        fused = {"status": "failed"}
+        failures.append("fused_iteration_rate")
+
     # fleet acceptance floors (DESIGN.md §11): the fig8 fleet probe must
     # sustain a minimum evaluated-candidate rate and the warm second pass
     # over the persistent eval cache must actually hit it
@@ -260,7 +340,7 @@ def main():
                   f"({100 * fleet['warm_f0_hit_rate']:.0f}%)")
             failures.append("fleet_warm_cache_hit_rate_floor")
 
-    path = write_bench_json(records, args.quick, speedup, optimizer)
+    path = write_bench_json(records, args.quick, speedup, optimizer, fused)
     print(f"wrote {path}")
 
     if failures:

@@ -180,6 +180,10 @@ def evaluate_step_batch(geom: DesignBatch, wl: LLMWorkload,
     }
 
 
+# NumPy oracle alias for the jitted pipeline (repro.core.eval_compiled)
+evaluate_step_batch_ref = evaluate_step_batch
+
+
 def step_result_at(out: Dict[str, np.ndarray], i: int) -> StepResult:
     """Materialize candidate i of an `evaluate_step_batch` result as the
     scalar StepResult (with its seconds-per-component breakdown)."""

@@ -386,3 +386,9 @@ def feasible_strategy_arrays(wl, total_cores: int, mem_budget: float,
         return np.array([[1, 1, 1, 1]], np.int64)
     return np.stack([g["tp"][idx], g["pp"][idx], g["dp"][idx],
                      g["mb"][idx]], axis=1)
+
+
+# NumPy oracle alias for the jitted strategy-grid selection
+# (repro.core.eval_compiled reproduces the mask, the sorted order, the cap
+# and the (1,1,1,1) fallback bit-exactly in-program)
+feasible_strategy_arrays_ref = feasible_strategy_arrays

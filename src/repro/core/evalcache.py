@@ -82,6 +82,8 @@ class EvalCacheBackend:
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
+        self.set_many_calls = 0
+        self.set_many_entries = 0
 
     # -- protocol ----------------------------------------------------------
 
@@ -102,15 +104,31 @@ class EvalCacheBackend:
             _bump("entries_added")
         return value
 
+    def set_many(self, items) -> int:
+        """Batch insert of (key, value) pairs: one lock acquisition — and
+        for disk-backed caches one segment append + flush — per call, so
+        the fused evaluation path writes a whole iteration's results in a
+        single operation. Returns the number of entries written."""
+        items = list(items)
+        with self._lock:
+            self._put_many(items)
+            self.set_many_calls += 1
+            self.set_many_entries += len(items)
+            _bump("entries_added", len(items))
+        return len(items)
+
     def clear(self) -> None:
         with self._lock:
             self._clear()
             self.hits = self.misses = 0
+            self.set_many_calls = self.set_many_entries = 0
 
     def stats(self) -> Dict[str, int]:
         with self._lock:
             s = {"hits": self.hits, "misses": self.misses,
-                 "entries": self._entries()}
+                 "entries": self._entries(),
+                 "set_many_calls": self.set_many_calls,
+                 "set_many_entries": self.set_many_entries}
             s.update(self._extra_stats())
             return s
 
@@ -121,6 +139,10 @@ class EvalCacheBackend:
 
     def _put(self, key: Key, value) -> None:
         raise NotImplementedError
+
+    def _put_many(self, items) -> None:
+        for key, value in items:
+            self._put(key, value)
 
     def _clear(self) -> None:
         raise NotImplementedError
@@ -279,6 +301,19 @@ class DiskSegmentEvalCache(EvalCacheBackend):
         self.mem._put(key, value)
         f = self._ensure_own()
         pickle.dump((key, value), f, protocol=pickle.HIGHEST_PROTOCOL)
+        f.flush()
+
+    def _put_many(self, items) -> None:
+        """One buffered append + flush for the whole batch; the record
+        stream stays `_iter_records`-compatible (back-to-back pickles)."""
+        for key, value in items:
+            self.mem._put(key, value)
+        if not items:
+            return
+        f = self._ensure_own()
+        f.write(b"".join(
+            pickle.dumps(rec, protocol=pickle.HIGHEST_PROTOCOL)
+            for rec in items))
         f.flush()
 
     def _clear(self) -> None:

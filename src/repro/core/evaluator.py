@@ -282,8 +282,64 @@ def evaluate_design_batch(designs: Sequence[WSCDesign], wl: LLMWorkload,
         fresh = backend.evaluate_batch(geom0.take(np.asarray(todo)), wl,
                                        nw[todo], max_strategies, gnn_params)
         for i, r in zip(todo, fresh):
-            results[i] = _BACKEND.put(keys[i], r)
+            results[i] = r
+        # one batched cache write (single segment append on disk backends)
+        _BACKEND.set_many([(keys[i], results[i]) for i in todo])
     return results            # type: ignore[return-value]
+
+
+def evaluate_pool_fused(pool_designs: Sequence[WSCDesign], wl: LLMWorkload,
+                        js_dev, q_eff: int,
+                        gnn_params: Optional[Dict] = None,
+                        n_wafers: Optional[int] = None,
+                        max_strategies: int = 24
+                        ) -> Tuple[List[int], List[EvalResult]]:
+    """Fused propose→evaluate for the analytical fidelity (DESIGN.md §12):
+    `js_dev` is the device-resident padded index vector the compiled
+    q-EHVI scan produced (`mfmobo._acquire_batch_device`); the compiled
+    evaluator gathers those candidate-pool rows and scores them inside the
+    same XLA dispatch chain, so the host never synchronizes between
+    proposal and evaluation. Returns (first q_eff pick indices, their
+    EvalResults).
+
+    Cache protocol (same counters as `evaluate_design_batch`): one `get`
+    per pick — hits keep the cached result, misses take the fused
+    program's rows — then one batched `set_many` write for the misses.
+    The evaluation itself is NOT skipped on hits (it already ran inside
+    the fused program); that is the documented consulted-vs-bypassed
+    trade: re-scoring q rows in-program is cheaper than a host round-trip
+    to decide whether to score them. Values are interchangeable because
+    the compiled pipeline is bit-identical to the reference."""
+    from repro.core import eval_compiled
+
+    pool = list(pool_designs)
+    geom = DesignBatch.from_designs(pool)
+    if n_wafers is None:
+        nw = _wafers_for_budget_batch(geom, wl)
+    else:
+        nw = np.broadcast_to(np.asarray(n_wafers, np.int64),
+                             (len(pool),)).copy()
+    pending = eval_compiled.dispatch_fused_eval(
+        geom, wl, nw, js_dev, max_strategies=max_strategies)
+    # one host sync for the indices — the fused evaluation is already
+    # enqueued behind the acquire scan by the time this completes
+    js_all = np.asarray(js_dev)
+    js = [int(j) for j in js_all[:q_eff]]
+    fresh = pending.finish(nw[js_all], q_eff)
+    keys = [_cache_key(pool[j], wl, "analytical", int(nw[j]),
+                       max_strategies, gnn_params) for j in js]
+    results: List[EvalResult] = []
+    new = []
+    for k, r in zip(keys, fresh):
+        hit = _BACKEND.get(k)
+        if hit is None:
+            results.append(r)
+            new.append((k, r))
+        else:
+            results.append(hit)
+    if new:
+        _BACKEND.set_many(new)
+    return js, results
 
 
 def evaluate_objectives(design: WSCDesign, wl: LLMWorkload,
@@ -344,7 +400,8 @@ __all__ = [
     "EvalResult", "Fidelity", "batched_objectives", "clear_eval_cache",
     "configure_eval_cache", "eval_cache_stats", "evaluate_design",
     "evaluate_design_batch", "evaluate_objectives",
-    "evaluate_objectives_batch", "evaluate_serving_batch",
+    "evaluate_objectives_batch", "evaluate_pool_fused",
+    "evaluate_serving_batch",
     "get_backend", "get_eval_cache_backend", "gnn_params_digest",
     "gnn_params_token", "registered_backends", "serving_objectives",
     "set_eval_cache_backend", "wafers_for_budget",

@@ -389,7 +389,13 @@ def _graph_latency(ax: CandidateAxis, lane_fn) -> np.ndarray:
 
 
 class AnalyticalBackend:
-    """f1: equivalent-bandwidth NoC model, closed form on the batch axis."""
+    """f1: equivalent-bandwidth NoC model, closed form on the batch axis.
+
+    `evaluate_batch` dispatches to the jitted pipeline
+    (repro.core.eval_compiled, DESIGN.md §12) — one compiled XLA program
+    over the pow2-padded (design, strategy) axes, bit-identical to the
+    NumPy reference retained as `evaluate_batch_ref` (property-tested in
+    tests/test_eval_compiled.py). REPRO_COMPILED_EVAL=0 falls back."""
 
     name = "analytical"
 
@@ -401,6 +407,19 @@ class AnalyticalBackend:
                        n_wafers: np.ndarray, max_strategies: int = 24,
                        gnn_params: Optional[Dict] = None
                        ) -> List[EvalResult]:
+        from repro.core import eval_compiled
+        if eval_compiled.enabled():
+            return eval_compiled.evaluate_batch_compiled(
+                geom, wl, np.asarray(n_wafers, np.int64), max_strategies)
+        return self.evaluate_batch_ref(geom, wl, n_wafers, max_strategies,
+                                       gnn_params)
+
+    def evaluate_batch_ref(self, geom: DesignBatch, wl: LLMWorkload,
+                           n_wafers: np.ndarray, max_strategies: int = 24,
+                           gnn_params: Optional[Dict] = None
+                           ) -> List[EvalResult]:
+        """NumPy reference pipeline (the pre-compiled implementation,
+        kept verbatim as the oracle for the jitted path)."""
         ax = build_candidate_axis(geom, wl, n_wafers, max_strategies)
         lat = chunk_latency_cycles_closed(ax.tiles["cycles"], ax.out_bytes,
                                           ax.gh, ax.gw, ax.cg.noc_bw)

@@ -158,13 +158,15 @@ def _acquire_scan_jit(X, mask, n0, yt, Lt, at, ls_t, sf_t, noise_t, mt, st,
     return js
 
 
-def _acquire_batch(models: Tuple[GP, GP], cand_x: np.ndarray,
-                   evaluated: np.ndarray, ref: np.ndarray,
-                   q: int = 1) -> List[int]:
-    """Greedy q-EHVI with fantasized observations. Returns q distinct
-    candidate indices; q=1 reduces exactly to the scalar EHVI argmax.
-    The NumPy reference loop lives in `repro.core.gp_ref.acquire_batch_ref`
-    (property-tested equivalent)."""
+def _acquire_batch_device(models: Tuple[GP, GP], cand_x: np.ndarray,
+                          evaluated: np.ndarray, ref: np.ndarray,
+                          q: int = 1):
+    """`_acquire_batch` without the host sync: returns the padded device
+    index vector straight from `_acquire_scan_jit` (the first q entries
+    are the picks). The fused analytical evaluator
+    (`repro.core.eval_compiled.dispatch_fused_eval`) consumes it on
+    device, so a synchronous f1 iteration never waits on the proposal
+    before dispatching the evaluation."""
     g_t, g_p = models
     if g_t.n != g_p.n:
         raise ValueError("objective GPs must share the training set")
@@ -196,6 +198,18 @@ def _acquire_batch(models: Tuple[GP, GP], cand_x: np.ndarray,
         jnp.asarray(np.asarray(cand_x, dt)), jnp.asarray(fant),
         jnp.asarray(fmask), jnp.asarray(len(fantasy)),
         jnp.asarray(np.asarray(ref, dt)), qpad)
+    return js
+
+
+def _acquire_batch(models: Tuple[GP, GP], cand_x: np.ndarray,
+                   evaluated: np.ndarray, ref: np.ndarray,
+                   q: int = 1) -> List[int]:
+    """Greedy q-EHVI with fantasized observations. Returns q distinct
+    candidate indices; q=1 reduces exactly to the scalar EHVI argmax.
+    The NumPy reference loop lives in `repro.core.gp_ref.acquire_batch_ref`
+    (property-tested equivalent)."""
+    q = max(1, min(q, len(cand_x)))
+    js = _acquire_batch_device(models, cand_x, evaluated, ref, q=q)
     return [int(j) for j in np.asarray(js)[:q]]
 
 
@@ -213,7 +227,9 @@ _WARMED_BUCKETS: set = set()
 
 def warm_optimizer_kernels(n_obs_max: int, n_candidates: int = 256,
                            q: int = 1, dim: Optional[int] = None,
-                           force: bool = False) -> int:
+                           force: bool = False,
+                           workload=None, n_designs_max: int = 0,
+                           max_strategies: int = 24) -> int:
     """Pre-compile the jitted optimizer programs for every capacity bucket
     a campaign of up to `n_obs_max` observations touches (GP pair fit +
     scanned q-EHVI acquire, one compile per pow2 bucket). Compilation is a
@@ -224,7 +240,13 @@ def warm_optimizer_kernels(n_obs_max: int, n_candidates: int = 256,
     nothing after the first. Returns the number of buckets *newly* warmed.
     Fantasy-front buffers track the training buffer in campaign use
     (evaluated count == observation count), so warming the training buckets
-    covers the acquire shapes too."""
+    covers the acquire shapes too.
+
+    With `workload` set, the compiled analytical evaluator programs warm
+    alongside the optimizer ones (`eval_compiled.warm_evaluator_kernels`,
+    same per-(bucket, workload-shape) memoization and `force=` semantics):
+    the design-axis buckets up to `n_designs_max` (defaults to the q
+    bucket) plus the fused gather program for the `n_candidates` pool."""
     from repro.core.design_space import DIMS
     d = len(DIMS) if dim is None else dim
     rng = np.random.default_rng(0)
@@ -246,6 +268,12 @@ def warm_optimizer_kernels(n_obs_max: int, n_candidates: int = 256,
         ev = obj_space([tuple(y) for y in Y])
         cand = rng.random((n_candidates, d))
         _acquire_batch(models, cand, ev, hv_ref(1e4), q=q)
+    if workload is not None:
+        from repro.core import eval_compiled
+        warmed += eval_compiled.warm_evaluator_kernels(
+            workload, n_designs_max=max(int(n_designs_max), qpad),
+            max_strategies=max_strategies, pool_sizes=(n_candidates,),
+            force=force)
     return warmed
 
 

@@ -106,6 +106,11 @@ def row_allgather_byte_hops(out_bytes: np.ndarray, gh: np.ndarray,
     return (per_pair * (gh * (gw * (gw * gw - 1)) / 3.0)).sum(axis=0)
 
 
+# NumPy oracle aliases for the jitted pipeline (repro.core.eval_compiled)
+row_allgather_comm_cycles_ref = row_allgather_comm_cycles
+row_allgather_byte_hops_ref = row_allgather_byte_hops
+
+
 def chunk_latency_cycles_closed(tile_cycles: np.ndarray, out_bytes: np.ndarray,
                                 gh: np.ndarray, gw: np.ndarray,
                                 noc_bw: np.ndarray) -> np.ndarray:

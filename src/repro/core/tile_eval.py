@@ -108,6 +108,12 @@ def evaluate_tile_batch(M: np.ndarray, K: np.ndarray, N: np.ndarray,
     }
 
 
+# NumPy oracle alias for the jitted pipeline (repro.core.eval_compiled):
+# the implementation above IS the reference; the compiled path mirrors it
+# op for op and is property-tested bit-exact against this name.
+evaluate_tile_batch_ref = evaluate_tile_batch
+
+
 def evaluate_tile(op: GEMMOp, mac: int, buffer_kb: float, buffer_bw: int,
                   dataflow: str) -> TileResult:
     """Scalar wrapper: delegates to the batched kernel with a length-1 axis."""

@@ -161,8 +161,16 @@ def expand_grid(grid: Mapping) -> List[CampaignSpec]:
 
 
 def _worker_setup(cfg: Dict) -> None:
-    """Per-process substrate: shared eval cache, shared XLA compilation
-    cache. Runs once, before the first campaign."""
+    """Per-process substrate: XLA host lanes, shared eval cache, shared
+    XLA compilation cache. Runs once, before the first campaign."""
+    lanes = int(cfg.get("host_devices") or 1)
+    if lanes > 1:
+        # must land before the worker's first jax import — spawn workers
+        # import jax lazily, and this runs ahead of every jax touchpoint
+        flags = os.environ.get("XLA_FLAGS", "")
+        want = f"--xla_force_host_platform_device_count={lanes}"
+        if want not in flags:
+            os.environ["XLA_FLAGS"] = (flags + " " + want).strip()
     if cfg.get("compile_cache_dir"):
         import jax
         jax.config.update("jax_compilation_cache_dir",
@@ -198,17 +206,28 @@ def _maybe_test_crash(cfg: Dict, spec: CampaignSpec, ck: Optional[str]):
 
 
 def _run_one(cfg: Dict, spec_dict: Dict) -> Dict:
+    from repro.core import eval_compiled
     from repro.core.evaluator import eval_cache_stats
     from repro.core.mfmobo import warm_optimizer_kernels
 
     spec = CampaignSpec.from_dict(spec_dict)
     warm_s = 0.0
     if cfg.get("warm_n_obs"):
+        from repro.explore.campaign import resolve_workload
+        try:
+            wl = resolve_workload(spec)
+        except Exception:
+            wl = None                # synthetic objective: no evaluator
         t0 = time.time()
         # memoized per process: only the first campaign compiles anything
+        # (evaluator programs included, via `workload=`)
         warm_optimizer_kernels(cfg["warm_n_obs"],
-                               n_candidates=spec.n_candidates, q=spec.q)
+                               n_candidates=spec.n_candidates, q=spec.q,
+                               workload=wl,
+                               n_designs_max=cfg["warm_n_obs"],
+                               max_strategies=spec.max_strategies)
         warm_s = time.time() - t0
+    lanes0 = eval_compiled.lane_stats()
     ck = _campaign_ckpt(cfg, spec)
     _maybe_test_crash(cfg, spec, ck)
     campaign = None
@@ -226,6 +245,12 @@ def _run_one(cfg: Dict, spec_dict: Dict) -> Dict:
     out["resumed"] = resumed
     out["warm_s"] = warm_s
     out["eval_cache"] = dict(eval_cache_stats())
+    # lane counters are process-global; report this campaign's delta so
+    # fleet aggregation over campaigns doesn't double-count
+    lanes1 = eval_compiled.lane_stats()
+    out["eval_lanes"] = {
+        k: (lanes1[k] if k == "n_lanes" else lanes1[k] - lanes0.get(k, 0))
+        for k in lanes1}
     return out
 
 
@@ -315,19 +340,15 @@ def run_fleet(spec: FleetSpec, *, verbose: bool = False) -> FleetResult:
            "checkpoint_dir": spec.checkpoint_dir,
            "checkpoint_every": spec.checkpoint_every,
            "warm_n_obs": spec.warm_n_obs,
+           "host_devices": spec.host_devices,
            "max_cache_entries": spec.max_cache_entries}
     for k in ("cache_dir", "compile_cache_dir", "checkpoint_dir"):
         if cfg[k]:
             os.makedirs(cfg[k], exist_ok=True)
 
-    old_flags = os.environ.get("XLA_FLAGS")
-    if spec.host_devices > 1:
-        # children inherit the environment at spawn: set lanes before the
-        # first Process.start(), restore after (DESIGN.md §10 host lanes)
-        os.environ["XLA_FLAGS"] = (
-            (old_flags + " " if old_flags else "")
-            + f"--xla_force_host_platform_device_count={spec.host_devices}")
-
+    # host lanes are configured inside each worker (`_worker_setup`), in
+    # the spawned child before its first jax import — the parent env is
+    # never mutated (DESIGN.md §10 host lanes)
     t0 = time.time()
     n_workers = min(spec.workers, len(spec.campaigns))
     pending = deque(range(len(spec.campaigns)))
@@ -340,11 +361,6 @@ def run_fleet(spec: FleetSpec, *, verbose: bool = False) -> FleetResult:
     workers: List[_Worker] = []
     try:
         workers = [_Worker(ctx, w, cfg) for w in range(n_workers)]
-        if spec.host_devices > 1:    # restore right after the spawns
-            if old_flags is None:
-                os.environ.pop("XLA_FLAGS", None)
-            else:
-                os.environ["XLA_FLAGS"] = old_flags
         while len(results) < len(spec.campaigns):
             for w in workers:
                 if w.current is None and pending:
@@ -408,11 +424,6 @@ def run_fleet(spec: FleetSpec, *, verbose: bool = False) -> FleetResult:
     finally:
         for w in workers:
             w.stop()
-        if spec.host_devices > 1:
-            if old_flags is None:
-                os.environ.pop("XLA_FLAGS", None)
-            else:
-                os.environ["XLA_FLAGS"] = old_flags
 
     wall = time.time() - t0
     ordered = [results.get(i) for i in range(len(spec.campaigns))]

@@ -169,9 +169,16 @@ class Objective:
 
     def eval_many(self, designs: Sequence[WSCDesign]
                   ) -> List[Tuple[float, float]]:
-        designs = list(designs)
+        return self.fold_metrics(self.metrics(list(designs)))
+
+    def fold_metrics(self, metrics: Sequence[Dict[str, float]]
+                     ) -> List[Tuple[float, float]]:
+        """Map metric dicts to (y0, y1) pairs — constraints, penalty,
+        counters. Shared by `eval_many` and the fused evaluation path
+        (which produces metric dicts from compiled-evaluator results
+        without going through `metrics()`)."""
         out: List[Tuple[float, float]] = []
-        for m in self.metrics(designs):
+        for m in metrics:
             feasible = bool(m.get("feasible", True))
             if not feasible:
                 self.n_infeasible += 1
@@ -245,6 +252,10 @@ class EvaluatorObjective(Objective):
             designs, self.wl, fidelity=self.backend,
             gnn_params=self.gnn_params(), n_wafers=self.n_wafers,
             max_strategies=self.max_strategies)
+        return self.metrics_from_results(rs)
+
+    @staticmethod
+    def metrics_from_results(rs) -> List[Dict[str, float]]:
         return [{
             "throughput": r.throughput,
             "power": r.power_w,
@@ -252,6 +263,30 @@ class EvaluatorObjective(Objective):
             "n_wafers": float(r.n_wafers),
             "feasible": r.feasible,
         } for r in rs]
+
+    # -- fused analytical iteration (DESIGN.md §12) ------------------------
+
+    def supports_fused(self) -> bool:
+        """True when this objective can consume device-resident pick
+        indices through the compiled analytical evaluator: analytical
+        fidelity, no per-design wafer override semantics beyond what the
+        fused path reproduces, and the compiled pipeline enabled."""
+        from repro.core import eval_compiled
+        return self.backend.name == "analytical" and eval_compiled.enabled()
+
+    def eval_many_fused(self, pool_designs: Sequence[WSCDesign], js_dev,
+                        q_eff: int
+                        ) -> Tuple[List[int], List[Tuple[float, float]]]:
+        """Evaluate the pool rows named by the device index vector
+        `js_dev` (the compiled acquire scan's output) through the fused
+        gather+evaluate program; returns (pick indices, folded ys) —
+        bit-identical to `eval_many([pool_designs[j] for j in js])`."""
+        from repro.core.evaluator import evaluate_pool_fused
+        js, rs = evaluate_pool_fused(
+            list(pool_designs), self.wl, js_dev, q_eff,
+            gnn_params=self.gnn_params(), n_wafers=self.n_wafers,
+            max_strategies=self.max_strategies)
+        return js, self.fold_metrics(self.metrics_from_results(rs))
 
 
 class ServingObjective(Objective):

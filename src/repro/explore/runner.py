@@ -55,6 +55,7 @@ from repro.core.evalcache import attribute_cache_traffic
 from repro.core.mfmobo import (
     Trace,
     _acquire_batch,
+    _acquire_batch_device,
     _fit_models,
     _valid_candidates,
     hv_ref,
@@ -216,6 +217,28 @@ class ExplorationLoop:
         self._fold_traffic(stage, acc)
         self.state.trace.n_evals += len(ys)
         return ys
+
+    @staticmethod
+    def _fused_ok(obj: Objective) -> bool:
+        fn = getattr(obj, "supports_fused", None)
+        return bool(fn()) if callable(fn) else False
+
+    def _acquire_eval_fused(self, obj: Objective, models, cand_x, cand_d,
+                            ev, q_eff: int, stage: str):
+        """One fused synchronous iteration (DESIGN.md §12): the compiled
+        q-EHVI scan's device-resident pick indices feed the compiled
+        analytical evaluator directly — propose → gather → evaluate in one
+        XLA dispatch chain, one host extraction at the end. Returns
+        (pick indices, ys) bit-identical to the unfused
+        `_acquire_batch` + `_eval` pair."""
+        js_dev = _acquire_batch_device(models, cand_x, ev, self.ref,
+                                       q=q_eff)
+        with attribute_cache_traffic() as acc:
+            js, ys = obj.eval_many_fused(cand_d, js_dev, q_eff)
+            ys = [(float(t), float(p)) for t, p in ys]
+        self._fold_traffic(stage, acc)
+        self.state.trace.n_evals += len(ys)
+        return js, ys
 
     def _record(self, x, d, y):
         tr = self.state.trace
@@ -424,10 +447,14 @@ class ExplorationLoop:
             models = _fit_models(np.array(st.X1), np.array(st.Y1))
             ev = (obj_space(st.Y1) if not use_f0 or not st.Y0
                   else obj_space(st.Y0))
-        js = _acquire_batch(models, cand_x, ev, self.ref, q=q_eff)
-        batch_d = [cand_d[j] for j in js]
-        ys = self._eval(self.f0 if use_f0 else self.f1, batch_d,
-                        "f0" if use_f0 else "f1")
+        obj = self.f0 if use_f0 else self.f1
+        stage = "f0" if use_f0 else "f1"
+        if self._fused_ok(obj):
+            js, ys = self._acquire_eval_fused(obj, models, cand_x, cand_d,
+                                              ev, q_eff, stage)
+        else:
+            js = _acquire_batch(models, cand_x, ev, self.ref, q=q_eff)
+            ys = self._eval(obj, [cand_d[j] for j in js], stage)
         for j, y in zip(js, ys):
             st.hist_d.append(cand_d[j])
             st.hist_y.append(y)
@@ -445,9 +472,13 @@ class ExplorationLoop:
         q_eff = max(1, min(cfg.q, cfg.N0 - cfg.d0 - st.done))
         models = _fit_models(np.array(st.X0), np.array(st.Y0))
         cand_x, cand_d = _valid_candidates(st.rng, cfg.n_candidates)
-        js = _acquire_batch(models, cand_x, obj_space(st.Y0), self.ref,
-                            q=q_eff)
-        ys = self._eval(self.f0, [cand_d[j] for j in js], "f0")
+        ev = obj_space(st.Y0)
+        if self._fused_ok(self.f0):
+            js, ys = self._acquire_eval_fused(self.f0, models, cand_x,
+                                              cand_d, ev, q_eff, "f0")
+        else:
+            js = _acquire_batch(models, cand_x, ev, self.ref, q=q_eff)
+            ys = self._eval(self.f0, [cand_d[j] for j in js], "f0")
         for j, y in zip(js, ys):
             st.X0.append(cand_x[j])
             st.Y0.append(y)
