@@ -209,8 +209,59 @@ def measure_fused_iteration_rate(n_obs: int = 16, n_candidates: int = 96,
     }
 
 
+def measure_joint_vs_grid(seed: int = 2, n0: int = 8, n1: int = 10,
+                          q: int = 2, n_candidates: int = 32):
+    """Strategy-architecture co-exploration acceptance probe (DESIGN.md
+    §13): two MFMOBO campaigns on the GPT-175B train workload with the
+    same seed and budget — one scoring each design at the argmin of the
+    frozen per-design strategy grid (`strategy_mode="grid"`), one
+    searching the joint (architecture, Strategy) space
+    (`strategy_mode="joint"`). Records both final hypervolumes, plus a
+    bit-exactness check that the joint pinned-evaluation path replays the
+    grid run's winning strategies to identical objectives (the contract
+    that makes the two hypervolumes comparable at all)."""
+    from repro.core.design_space import JointDesign
+    from repro.core.evaluator import (clear_eval_cache, evaluate_design_batch,
+                                      evaluate_joint_batch)
+    from repro.explore import Campaign, CampaignSpec, FidelitySchedule
+    from repro.explore.campaign import resolve_workload
+
+    def mk(mode):
+        return CampaignSpec(
+            name=f"joint-vs-grid-{mode}", workload="GPT-175B",
+            scenario="train", strategy="mfmobo",
+            fidelity=FidelitySchedule(f1="analytical", f0="analytical",
+                                      d1=2, d0=2, k=2),
+            n_evals_f0=n0, n_evals_f1=n1, q=q, n_candidates=n_candidates,
+            seed=seed, strategy_mode=mode)
+
+    out = {"workload": "GPT-175B", "seed": seed,
+           "n_evals_f0": n0, "n_evals_f1": n1, "q": q}
+    runs = {}
+    for mode in ("grid", "joint"):
+        clear_eval_cache()
+        t0 = time.perf_counter()
+        runs[mode] = Campaign(mk(mode)).run()
+        out[f"hv_{mode}"] = float(runs[mode].hv_final)
+        out[f"wall_s_{mode}"] = time.perf_counter() - t0
+    # replay contract: pinning each grid-evaluated design to its own grid
+    # argmin strategy through the joint path must reproduce the grid
+    # objectives bit-for-bit
+    wl = resolve_workload(mk("grid"))
+    designs = list(runs["grid"].trace.designs)
+    grid_r = evaluate_design_batch(designs, wl)
+    pts = [JointDesign(d, r.strategy)
+           for d, r in zip(designs, grid_r) if r.feasible]
+    joint_r = evaluate_joint_batch(pts, wl)
+    out["pinned_matches_grid"] = bool(pts) and all(
+        b.feasible and a.throughput == b.throughput
+        for a, b in zip([r for r in grid_r if r.feasible], joint_r))
+    out["n_replayed"] = len(pts)
+    return out
+
+
 def write_bench_json(records, quick: bool, speedup, optimizer=None,
-                     fused=None):
+                     fused=None, joint_vs_grid=None):
     # merge into the existing file so an `--only` subset run refreshes its
     # own records without wiping the other benchmarks' tracked history
     merged = {}
@@ -227,6 +278,7 @@ def write_bench_json(records, quick: bool, speedup, optimizer=None,
         "batch_eval": speedup,
         "optimizer": optimizer or {"status": "failed"},
         "fused_iteration": fused or {"status": "failed"},
+        "joint_vs_grid": joint_vs_grid or {"status": "failed"},
         "benchmarks": merged,
     }
     with open(BENCH_JSON, "w") as f:
@@ -327,6 +379,28 @@ def main():
         fused = {"status": "failed"}
         failures.append("fused_iteration_rate")
 
+    print(f"\n{'='*70}\nMeasuring joint-vs-grid strategy co-exploration"
+          f"\n{'='*70}", flush=True)
+    try:
+        jvg = measure_joint_vs_grid()
+        print(f"joint-vs-grid [{jvg['workload']}, seed {jvg['seed']}]: "
+              f"grid hv={jvg['hv_grid']:.2f} "
+              f"({jvg['wall_s_grid']:.0f}s)  joint hv={jvg['hv_joint']:.2f} "
+              f"({jvg['wall_s_joint']:.0f}s)  pinned replay "
+              f"{'matches' if jvg['pinned_matches_grid'] else 'DIVERGES'} "
+              f"({jvg['n_replayed']} points)")
+        if not jvg["pinned_matches_grid"]:
+            print("joint pinned path does not replay the grid argmin "
+                  "strategies bit-exactly")
+            failures.append("joint_pinned_replay_mismatch")
+        if jvg["hv_joint"] < jvg["hv_grid"]:
+            print("joint-campaign hypervolume below the grid-campaign floor")
+            failures.append("joint_vs_grid_hv_floor")
+    except Exception:
+        traceback.print_exc()
+        jvg = {"status": "failed"}
+        failures.append("joint_vs_grid")
+
     # fleet acceptance floors (DESIGN.md §11): the fig8 fleet probe must
     # sustain a minimum evaluated-candidate rate and the warm second pass
     # over the persistent eval cache must actually hit it
@@ -340,7 +414,8 @@ def main():
                   f"({100 * fleet['warm_f0_hit_rate']:.0f}%)")
             failures.append("fleet_warm_cache_hit_rate_floor")
 
-    path = write_bench_json(records, args.quick, speedup, optimizer, fused)
+    path = write_bench_json(records, args.quick, speedup, optimizer, fused,
+                            jvg)
     print(f"wrote {path}")
 
     if failures:

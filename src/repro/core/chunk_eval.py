@@ -38,7 +38,9 @@ def evaluate_step_batch(geom: DesignBatch, wl: LLMWorkload,
                         sram_bits_layer: np.ndarray,
                         noc_bytes_layer: np.ndarray, n_wafers: np.ndarray,
                         peak_power_w: Optional[float] = None,
-                        legacy_dram_energy: bool = False
+                        legacy_dram_energy: bool = False,
+                        ep: Optional[np.ndarray] = None,
+                        recompute: Optional[np.ndarray] = None
                         ) -> Dict[str, np.ndarray]:
     """Batched chunk-level model over C candidates.
 
@@ -49,6 +51,15 @@ def evaluate_step_batch(geom: DesignBatch, wl: LLMWorkload,
     Returns a dict of (C,) arrays: step_time_s, throughput, power_w,
     pipeline_eff, energy_j, feasible, plus the per-component breakdown terms
     (compute_s/tp_s/pp_s/dram_s/dp_s are per-microbatch stage seconds).
+
+    Joint-search extras (ISSUE 9): `ep` (expert parallel degree) and
+    `recompute` (activation recomputation) are optional (C,) arrays. Every
+    extra term is `np.where`-guarded so a lane with ep=1/recompute=False is
+    bitwise identical to the legacy model (x + 0.0 == x, where(False, _, y)
+    == y) — the grid-mode replay contract is preserved by construction.
+    Recompute re-runs the forward in the backward pass (bwd 3x -> 4x,
+    training only); ep shards the expert weights and adds per-layer
+    dispatch/combine all-to-all over the inter-reticle fabric.
     """
     tp = np.asarray(tp, np.int64)
     pp = np.asarray(pp, np.int64)
@@ -59,6 +70,9 @@ def evaluate_step_batch(geom: DesignBatch, wl: LLMWorkload,
 
     train = wl.phase == "train"
     bwd_mult = 3.0 if train else 1.0
+    if recompute is not None and train:
+        bwd_mult = np.where(np.asarray(recompute, bool), 4.0, 3.0)
+    ep_arr = None if ep is None else np.maximum(np.asarray(ep, np.int64), 1)
     mb_count = mb if train else np.ones_like(mb)
     mb_tokens = np.maximum(wl.tokens_per_step() // (dp * mb_count), 1)
     layers_per_stage = np.maximum(wl.n_layers // pp, 1)
@@ -85,6 +99,12 @@ def evaluate_step_batch(geom: DesignBatch, wl: LLMWorkload,
     sram_per_chunk = (geom.buffer_kb * 1024.0 * geom.total_cores * nw
                       / np.maximum(chunks, 1))
     w_bytes = p_bytes / np.maximum(pp, 1)
+    if ep_arr is not None:
+        # expert weights shard over the ep group (dense slice replicated)
+        p_exp = wl.expert_params_bytes()
+        w_bytes = np.where(ep_arr > 1,
+                           ((p_bytes - p_exp) + p_exp / ep_arr)
+                           / np.maximum(pp, 1), w_bytes)
     # KV-cache traffic per step (per chunk): a decode step streams the whole
     # resident cache to score one new token per sequence and appends that
     # token's K/V (per-token KV read + write); a prefill step writes the
@@ -114,6 +134,18 @@ def evaluate_step_batch(geom: DesignBatch, wl: LLMWorkload,
                       dram_traffic / np.maximum(dram_bw, 1.0))
 
     stage_s = compute_s + tp_s + pp_s + dram_s
+    a2a_vol = None
+    ep_s = np.zeros_like(stage_s)
+    if ep_arr is not None:
+        # MoE dispatch+combine all-to-all per layer (fwd, x2 directions,
+        # top-k routed copies), over the inter-reticle fabric
+        topk = max(wl.moe_topk, 1)
+        a2a_vol = np.where(ep_arr > 1,
+                           4.0 * (ep_arr - 1) / ep_arr * act_bytes * topk,
+                           0.0)
+        ep_s = (a2a_vol / np.maximum(geom.inter_reticle_bw_Bps, 1.0)
+                * layers_per_stage * bwd_mult)
+        stage_s = stage_s + ep_s
 
     # --- pipeline + step ----------------------------------------------------
     eff = mb_count / (mb_count + pp - 1.0)
@@ -141,6 +173,8 @@ def evaluate_step_batch(geom: DesignBatch, wl: LLMWorkload,
     ir_bytes = (2.0 * (tp - 1) / np.maximum(tp, 1) * mb_tokens * wl.d_model
                 * BYTES * 2 * wl.n_layers * mb_count * dp * bwd_mult)
     ir_bytes = ir_bytes + p_bytes * 2 * (dp > 1)
+    if a2a_vol is not None:
+        ir_bytes = ir_bytes + a2a_vol * wl.n_layers * mb_count * dp
     e_ir = ir_bytes * 8 * geom.ir_energy_pj_per_bit * 1e-12
     # DRAM energy charges the same per-step traffic as the latency term
     # above (SRAM pool sized per system — nw wafers — plus KV streaming).
@@ -175,7 +209,7 @@ def evaluate_step_batch(geom: DesignBatch, wl: LLMWorkload,
         "non_finite": bad,
         # per-microbatch stage components (for the winner's breakdown)
         "compute_s": compute_s, "tp_s": tp_s, "pp_s": pp_s,
-        "dram_s": dram_s, "dp_s": dp_s,
+        "dram_s": dram_s, "dp_s": dp_s, "ep_s": ep_s,
         "mb_count": mb_count,
     }
 
@@ -194,16 +228,22 @@ def step_result_at(out: Dict[str, np.ndarray], i: int) -> StepResult:
     eff = float(out["pipeline_eff"][i])
     mbc = float(out["mb_count"][i])
     feasible = bool(out["feasible"][i])
+    bd = {"compute": float(out["compute_s"][i]) * mbc / eff,
+          "tp": float(out["tp_s"][i]) * mbc / eff,
+          "pp": float(out["pp_s"][i]) * mbc / eff,
+          "dram": float(out["dram_s"][i]) * mbc / eff,
+          "dp": float(out["dp_s"][i])}
+    ep_s = float(out["ep_s"][i]) if "ep_s" in out else 0.0
+    if ep_s:
+        # only when expert parallelism is active — grid-mode breakdowns
+        # (and their recorded fingerprints) keep the legacy key set
+        bd["ep"] = ep_s * mbc / eff
     return StepResult(
         step_time_s=float(out["step_time_s"][i]),
         throughput=float(out["throughput"][i]),
         power_w=float(out["power_w"][i]),
         pipeline_eff=eff,
-        breakdown={"compute": float(out["compute_s"][i]) * mbc / eff,
-                   "tp": float(out["tp_s"][i]) * mbc / eff,
-                   "pp": float(out["pp_s"][i]) * mbc / eff,
-                   "dram": float(out["dram_s"][i]) * mbc / eff,
-                   "dp": float(out["dp_s"][i])},
+        breakdown=bd,
         energy_j=float(out["energy_j"][i]),
         feasible=feasible,
         reason="" if feasible else "power",
@@ -240,5 +280,6 @@ def evaluate_step(design: WSCDesign, wl: LLMWorkload, s: Strategy,
         np.asarray([s.microbatches]), np.asarray([chunk_latency_cycles]),
         np.asarray([sram_bits_layer]), np.asarray([noc_bytes_layer]),
         np.asarray([n_wafers]), peak_power_w,
-        legacy_dram_energy=legacy_dram_energy)
+        legacy_dram_energy=legacy_dram_energy,
+        ep=np.asarray([s.ep]), recompute=np.asarray([s.recompute]))
     return step_result_at(out, 0)

@@ -272,21 +272,100 @@ def row_allgather_pattern(gh: int, gw: int) -> RowAllGatherPattern:
 # ---------------------------------------------------------------------------
 
 
+SCHEDULES = ("1f1b", "gpipe")
+
+
 @dataclasses.dataclass(frozen=True)
 class Strategy:
     tp: int
     pp: int
     dp: int
     microbatches: int
+    # joint-search extensions (ISSUE 9): expert parallelism, activation
+    # recomputation and the pipeline schedule. Defaults reproduce the
+    # legacy 4-field strategies, so grid-mode campaigns and their cached
+    # EvalResults are unchanged.
+    ep: int = 1
+    recompute: bool = False
+    schedule: str = "1f1b"
 
     def chunks(self) -> int:
         return self.pp * self.dp
 
 
+def strategy_memory_need(wl: LLMWorkload, tp, pp, dp, mb,
+                         ep=1, recompute=False, gpipe=False):
+    """System-wide memory footprint of a strategy (bytes), recompute- and
+    schedule-aware. NumPy-polymorphic: scalars or broadcastable arrays.
+
+    Terms (the v2 model — the legacy grid keeps the frozen PR 2 check so
+    existing campaign traces replay bit-identically, see `_strategy_grid`):
+      * weights+optimizer: dp replicas each hold params/pp; `opt_mult`
+        (weights+grads+Adam moments) applies uniformly — the legacy check
+        only applied it on the train branch;
+      * MoE expert weights additionally divide by `ep`;
+      * activations: each pipeline stage keeps one microbatch's
+        activations per resident layer; recompute keeps only the stage
+        boundary activation; GPipe keeps all `mb` microbatches in flight,
+        1F1B at most `pp`;
+      * KV cache (inference): splits across replicas, constant total.
+    """
+    pp = np.maximum(pp, 1)
+    ep = np.maximum(ep, 1)
+    train = wl.phase == "train"
+    opt_mult = 6.0 if train else 1.0   # weights + grads + 2 Adam moments
+    p_bytes = wl.params_bytes()
+    p_exp = wl.expert_params_bytes()
+    w_shard = np.where(ep > 1, (p_bytes - p_exp) + p_exp / ep, p_bytes)
+    need = dp * w_shard * opt_mult / pp
+    mb_count = mb if train else np.ones_like(np.asarray(mb))
+    mb_tokens = np.maximum(wl.tokens_per_step() // (dp * mb_count), 1)
+    layers_per_stage = np.maximum(wl.n_layers // pp, 1)
+    stored_layers = np.where(recompute, 1, layers_per_stage)
+    inflight = np.where(gpipe, mb_count, np.minimum(mb_count, pp))
+    act = (wl.act_bytes_per_layer(mb_tokens) * stored_layers * inflight
+           * pp * dp)
+    need = need + act
+    if not train:
+        need = need + wl.kv_bytes_per_layer() * wl.n_layers
+    return need
+
+
+def derived_strategy_caps(wl: LLMWorkload, total_cores: int
+                          ) -> Dict[str, int]:
+    """Largest power-of-two value of each strategy axis the design/workload
+    pair admits — replaces the historical magic constants (tp <= 4096,
+    pp <= 64) with caps derived from the actual core count and layer
+    count. `ep` caps at the expert count (1 for dense models)."""
+    def p2(n: int) -> int:
+        return 1 << max(int(n), 1).bit_length() - 1
+
+    return {
+        "tp": p2(max(total_cores, 1)),
+        "pp": p2(min(wl.n_layers, max(total_cores, 1))),
+        "dp": p2(max(wl.batch, 1)),
+        "ep": p2(max(wl.moe_experts, 1)),
+        "microbatches": 32 if wl.phase == "train" else 1,
+    }
+
+
 def enumerate_strategies(design: WSCDesign, wl: LLMWorkload,
-                         n_wafers: int = 1) -> List[Strategy]:
+                         n_wafers: int = 1,
+                         memory_model: str = "v2") -> List[Strategy]:
     """All (TP, DP, PP, micro-batch) combos satisfying memory capacity
-    (paper: iterate all combinations that satisfy the memory constraint)."""
+    (paper: iterate all combinations that satisfy the memory constraint).
+
+    Caps are derived from the design (`total_cores`) and workload
+    (`n_layers`, `batch`) — a 128-layer model can use pp=128, a
+    million-core system tp > 4096. `memory_model` picks the feasibility
+    check: "v2" (default) is the recompute-aware `strategy_memory_need`;
+    "grid" is the frozen legacy check that `feasible_strategy_arrays` /
+    the compiled evaluator bake in (kept so the scalar path stays
+    element-identical to grid-mode evaluation and recorded campaign
+    traces). Since ISSUE 9 this is a seeding/fallback path — joint-mode
+    campaigns search the strategy axis directly (design_space.
+    StrategySpace) and validate through `validator.validate_joint_batch`.
+    """
     total_cores = design.total_cores() * n_wafers
     sram_total = design.buffer_kb * 1024.0 * total_cores
     dram_total = design.dram_gb_per_reticle() * 1e9 * design.n_reticles() * n_wafers
@@ -295,24 +374,26 @@ def enumerate_strategies(design: WSCDesign, wl: LLMWorkload,
     opt_mult = 6.0 if wl.phase == "train" else 1.0   # weights+grads+adam
     out: List[Strategy] = []
     pows = [2 ** i for i in range(0, 17)]
-    for pp in [p for p in pows if p <= min(wl.n_layers, 64)]:
+    for pp in [p for p in pows if p <= wl.n_layers]:
         for dp in [d for d in pows if d <= max(wl.batch, 1)]:
-            for tp in [t for t in pows if t <= 4096]:
+            for tp in pows:
                 chunks = pp * dp
                 if chunks * tp > total_cores or tp > total_cores:
-                    continue
-                # memory: dp replicas each hold params/pp (+ optimizer);
-                # the KV cache splits across replicas (constant total)
-                need = dp * p_bytes * opt_mult / max(pp, 1)
-                if wl.phase != "train":
-                    need = dp * p_bytes / max(pp, 1)
-                    need += wl.kv_bytes_per_layer() * wl.n_layers
-                if need > mem_budget:
                     continue
                 for mb in (1, 2, 4, 8, 16, 32):
                     if wl.phase != "train" and mb > 1:
                         continue
                     if wl.batch % (dp * (mb if wl.phase == "train" else 1)):
+                        continue
+                    if memory_model == "v2":
+                        need = float(strategy_memory_need(wl, tp, pp, dp, mb))
+                    else:
+                        # frozen legacy check (see _strategy_grid)
+                        need = dp * p_bytes * opt_mult / max(pp, 1)
+                        if wl.phase != "train":
+                            need = dp * p_bytes / max(pp, 1)
+                            need += wl.kv_bytes_per_layer() * wl.n_layers
+                    if need > mem_budget:
                         continue
                     out.append(Strategy(tp, pp, dp, mb))
     return out or [Strategy(1, 1, 1, 1)]
@@ -342,9 +423,15 @@ def _strategy_grid(wl) -> Dict[str, np.ndarray]:
     opt_mult = 6.0 if wl.phase == "train" else 1.0
     pows = [2 ** i for i in range(0, 17)]
     tps, pps, dps, mbs, needs = [], [], [], [], []
-    for pp in [p for p in pows if p <= min(wl.n_layers, 64)]:
+    # Caps derive from the workload (pp <= n_layers, tp unbounded up to the
+    # per-design core-count mask applied later); the memory column `need`
+    # stays the frozen PR 2 formula — this grid is the grid-mode replay
+    # contract (recorded campaign traces, fig8 fixtures) and must keep the
+    # exact historical feasibility bits. The recompute-aware v2 model
+    # (`strategy_memory_need`) lives in the joint-search path.
+    for pp in [p for p in pows if p <= wl.n_layers]:
         for dp in [d for d in pows if d <= max(wl.batch, 1)]:
-            for tp in [t for t in pows if t <= 4096]:
+            for tp in pows:
                 if wl.phase == "train":
                     need = dp * p_bytes * opt_mult / max(pp, 1)
                 else:

@@ -420,3 +420,168 @@ class DesignBatch:
             else:
                 kw[f.name] = v[idx]
         return DesignBatch(**kw)
+
+
+# ---------------------------------------------------------------------------
+# joint (architecture, strategy) search space — ISSUE 9 tentpole.
+#
+# The parallelization strategy stops being a dense grid scored inside the
+# evaluator and becomes extra normalized dimensions appended to the 13-dim
+# architecture encoding, so MFMOBO proposes joint points directly.
+# Power-of-two axes (tp/pp/dp/ep) encode as exponent fractions of a
+# workload-derived cap; microbatch count indexes the discrete choice list;
+# recompute and the pipeline schedule are threshold bits.
+# ---------------------------------------------------------------------------
+
+STRATEGY_DIMS = ("tp", "pp", "dp", "ep", "microbatches", "recompute",
+                 "schedule")
+MB_CHOICES = (1, 2, 4, 8, 16, 32)
+
+
+def _exp_of(v: int) -> int:
+    return max(int(v), 1).bit_length() - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategySpace:
+    """Bounds of the strategy axes for one workload: max exponent of each
+    power-of-two split and the microbatch choice list. Frozen/hashable so a
+    space can key caches and compare for checkpoint-resume equality."""
+    tp_exp: int = 16
+    pp_exp: int = 6
+    dp_exp: int = 9
+    ep_exp: int = 0
+    mb_choices: Tuple[int, ...] = MB_CHOICES
+    train: bool = True
+
+    @property
+    def n_dims(self) -> int:
+        return len(STRATEGY_DIMS)
+
+    @classmethod
+    def for_workload(cls, wl, total_cores: int) -> "StrategySpace":
+        """Derive the axis caps from the workload and the largest system
+        under search (`compiler.derived_strategy_caps`)."""
+        from repro.core.compiler import derived_strategy_caps
+        caps = derived_strategy_caps(wl, total_cores)
+        train = wl.phase == "train"
+        mbs = tuple(m for m in MB_CHOICES
+                    if m <= caps["microbatches"]) or (1,)
+        return cls(tp_exp=_exp_of(caps["tp"]), pp_exp=_exp_of(caps["pp"]),
+                   dp_exp=_exp_of(caps["dp"]), ep_exp=_exp_of(caps["ep"]),
+                   mb_choices=mbs, train=train)
+
+    # -- JSON round-trip (CampaignSpec strategy-space bounds) --------------
+
+    def to_json(self) -> Dict:
+        return {"tp_exp": self.tp_exp, "pp_exp": self.pp_exp,
+                "dp_exp": self.dp_exp, "ep_exp": self.ep_exp,
+                "mb_choices": list(self.mb_choices), "train": self.train}
+
+    @classmethod
+    def from_json(cls, obj: Dict) -> "StrategySpace":
+        return cls(tp_exp=int(obj["tp_exp"]), pp_exp=int(obj["pp_exp"]),
+                   dp_exp=int(obj["dp_exp"]), ep_exp=int(obj["ep_exp"]),
+                   mb_choices=tuple(int(m) for m in obj["mb_choices"]),
+                   train=bool(obj["train"]))
+
+    # -- codec -------------------------------------------------------------
+
+    def decode_arrays(self, Us: np.ndarray) -> Dict[str, np.ndarray]:
+        """(N, 7) strategy columns -> dict of per-axis arrays. Row i equals
+        the scalar `decode_strategy(Us[i])`."""
+        Us = np.clip(np.atleast_2d(np.asarray(Us, np.float64)), 0.0, 1.0)
+        tp = np.int64(1) << np.round(Us[:, 0] * self.tp_exp).astype(np.int64)
+        pp = np.int64(1) << np.round(Us[:, 1] * self.pp_exp).astype(np.int64)
+        dp = np.int64(1) << np.round(Us[:, 2] * self.dp_exp).astype(np.int64)
+        ep = np.int64(1) << np.round(Us[:, 3] * self.ep_exp).astype(np.int64)
+        mbi = np.round(Us[:, 4] * (len(self.mb_choices) - 1)).astype(np.int64)
+        mb = np.asarray(self.mb_choices, np.int64)[mbi]
+        if not self.train:
+            mb = np.ones_like(mb)
+        rc = (Us[:, 5] >= 0.5) if self.train else np.zeros(len(Us), bool)
+        gpipe = Us[:, 6] >= 0.5
+        return {"tp": tp, "pp": pp, "dp": dp, "ep": ep, "mb": mb,
+                "recompute": rc, "gpipe": gpipe}
+
+    def decode_strategy(self, u_s: np.ndarray):
+        """(7,) strategy columns -> compiler.Strategy."""
+        from repro.core.compiler import Strategy
+        a = self.decode_arrays(np.asarray(u_s)[None, :])
+        return Strategy(int(a["tp"][0]), int(a["pp"][0]), int(a["dp"][0]),
+                        int(a["mb"][0]), ep=int(a["ep"][0]),
+                        recompute=bool(a["recompute"][0]),
+                        schedule="gpipe" if a["gpipe"][0] else "1f1b")
+
+    def encode_strategy(self, s) -> np.ndarray:
+        """compiler.Strategy -> (7,) columns; decode_strategy round-trips any
+        strategy inside the caps."""
+        def frac(v, cap):
+            return _exp_of(v) / cap if cap else 0.0
+
+        mb = min(self.mb_choices, key=lambda m: abs(m - s.microbatches))
+        mbi = self.mb_choices.index(mb)
+        mb_f = mbi / (len(self.mb_choices) - 1) if len(self.mb_choices) > 1 \
+            else 0.0
+        return np.array([
+            frac(s.tp, self.tp_exp), frac(s.pp, self.pp_exp),
+            frac(s.dp, self.dp_exp), frac(s.ep, self.ep_exp), mb_f,
+            1.0 if s.recompute else 0.0,
+            1.0 if s.schedule == "gpipe" else 0.0])
+
+    def encode_batch(self, strategies) -> np.ndarray:
+        return np.stack([self.encode_strategy(s) for s in strategies]) \
+            if strategies else np.zeros((0, self.n_dims))
+
+
+@dataclasses.dataclass(frozen=True)
+class JointDesign:
+    """One joint (architecture, strategy) search point."""
+    design: WSCDesign
+    strategy: "object"             # compiler.Strategy (lazy to avoid cycle)
+
+    def describe(self) -> str:
+        s = self.strategy
+        sched = f" {s.schedule}" if s.schedule != "1f1b" else ""
+        rc = " rc" if s.recompute else ""
+        ep = f" ep={s.ep}" if s.ep > 1 else ""
+        return (f"{self.design.describe()} | tp={s.tp} pp={s.pp} dp={s.dp} "
+                f"mb={s.microbatches}{ep}{rc}{sched}")
+
+
+def joint_dims(space: StrategySpace) -> int:
+    return len(DIMS) + space.n_dims
+
+
+def sample_joint(rng: np.random.Generator, n: int,
+                 space: StrategySpace) -> np.ndarray:
+    """n raw points in [0,1]^(13+7) (joint validator filters infeasible)."""
+    return rng.random((n, joint_dims(space)))
+
+
+def decode_joint_batch(U: np.ndarray, space: StrategySpace,
+                       max_core_dim: int = 32, max_ret_dim: int = 12
+                       ) -> List[JointDesign]:
+    """Vectorized joint decode: architecture columns through `decode_batch`,
+    strategy columns through the space codec."""
+    from repro.core.compiler import Strategy
+    U = np.atleast_2d(np.asarray(U, np.float64))
+    designs = decode_batch(U[:, :len(DIMS)], max_core_dim, max_ret_dim)
+    a = space.decode_arrays(U[:, len(DIMS):])
+    return [JointDesign(d, Strategy(
+        int(a["tp"][i]), int(a["pp"][i]), int(a["dp"][i]), int(a["mb"][i]),
+        ep=int(a["ep"][i]), recompute=bool(a["recompute"][i]),
+        schedule="gpipe" if a["gpipe"][i] else "1f1b"))
+        for i, d in enumerate(designs)]
+
+
+def encode_joint_batch(points: Sequence[JointDesign], space: StrategySpace,
+                       max_core_dim: int = 32, max_ret_dim: int = 12
+                       ) -> np.ndarray:
+    """Row i == concat(encode(design_i), encode_strategy(strategy_i))."""
+    if not points:
+        return np.zeros((0, joint_dims(space)))
+    arch = encode_batch([p.design for p in points], max_core_dim,
+                        max_ret_dim)
+    strat = space.encode_batch([p.strategy for p in points])
+    return np.concatenate([arch, strat], axis=1)

@@ -189,6 +189,7 @@ class _EvalProgram:
         self._bwd = 3.0 if self._train else 1.0
         self._tokens = wl.tokens_per_step()
         self._p_bytes = wl.params_bytes()
+        self._p_exp = wl.expert_params_bytes()
         self._kvtot_num = wl.kv_bytes_per_layer() * wl.n_layers
         self._e_mac = wl.flops_per_step() / 2.0 * C.ENERGY.mac * 1e-12
 
@@ -201,6 +202,20 @@ class _EvalProgram:
             return self._body(sub, nw[js], zc)
 
         self._fused_jit = jax.jit(fused)
+
+        # pinned-strategy (joint mode, ISSUE 9): same `_eval_core` trace,
+        # no grid selection — the strategy arrays come in as inputs
+        self._jit_pinned = jax.jit(self._body_pinned)
+        self._pfn_pinned = (jax.pmap(self._body_pinned,
+                                     in_axes=(0, 0, None, 0))
+                            if lanes > 1 else None)
+
+        def fused_pinned(arrs, nw, zc, strat, js):
+            sub = {k: v[js] for k, v in arrs.items()}
+            st = tuple(s[js] for s in strat)
+            return self._body_pinned(sub, nw[js], zc, st)
+
+        self._fused_pinned_jit = jax.jit(fused_pinned)
 
     def _zc(self):
         """Traced scalars for `_body`: the FMA-guard zero plus the inexact
@@ -224,9 +239,8 @@ class _EvalProgram:
 
     def _body(self, arrs, nw, zc):
         jnp = _jnp()
-        wl = self.wl
         K = self.K
-        z, bwd_t, clock_t, dmod_t, p12, nl_t = zc
+        z = zc[0]
 
         # `z` is a traced f64 zero. XLA CPU contracts `a*b + c` into an FMA
         # (skipping the product's rounding step), which NumPy never does;
@@ -240,11 +254,7 @@ class _EvalProgram:
         def fp(x):
             return x + z
 
-        code = arrs["dataflow_code"].astype(jnp.int64)
-        mac = arrs["mac"].astype(jnp.int64)
         buffer_kb = arrs["buffer_kb"]
-        buffer_bw = arrs["buffer_bw"].astype(jnp.int64)
-        noc_bw = arrs["noc_bw"]
         total_cores = arrs["total_cores"].astype(jnp.int64)
         nw = nw.astype(jnp.int64)
 
@@ -281,10 +291,60 @@ class _EvalProgram:
         sel = jnp.where(first, self._fb_idx, sel)
         selmask = selmask | first
 
-        tp = tp_o[sel]
-        pp = pp_o[sel]
-        dp = dp_o[sel]
-        mb = mb_o[sel]
+        cand = self._eval_core(arrs, nw, zc, tp_o[sel], pp_o[sel],
+                               dp_o[sel], mb_o[sel], None)
+
+        # --- per-design winner (first max wins, like np.argmax) ----------
+        live = cand["feasible"] & selmask
+        thpt_rank = jnp.where(live, cand["throughput"], -1.0)
+        jw = jnp.argmax(thpt_rank, axis=1)
+
+        def at(a):
+            return jnp.take_along_axis(a, jw[:, None], axis=1)[:, 0]
+
+        out = {"any_feasible": live.any(axis=1), "sel_g": at(sel)}
+        for k in ("throughput", "power_w", "step_time_s", "pipeline_eff",
+                  "energy_j", "compute_s", "tp_s", "pp_s", "dram_s",
+                  "dp_s", "mb_count"):
+            out[k] = at(cand[k])
+        return out
+
+    def _body_pinned(self, arrs, nw, zc, strat):
+        """Joint-mode body: one pinned strategy per design, no grid argmin.
+        `strat` = (tp, pp, dp, mb, ep, recompute) as (N,) arrays. Shares
+        `_eval_core` with the grid body, so a pinned (tp, pp, dp, mb) with
+        ep=1/recompute=False reproduces that grid row bit for bit."""
+        jnp = _jnp()
+
+        def col(a):
+            return a.astype(jnp.int64)[:, None]
+
+        tp, pp, dp, mb, ep, rc = strat
+        cand = self._eval_core(arrs, nw.astype(jnp.int64), zc, col(tp),
+                               col(pp), col(dp), col(mb),
+                               (col(ep), rc.astype(bool)[:, None]))
+        return {k: v[:, 0] for k, v in cand.items()}
+
+    def _eval_core(self, arrs, nw, zc, tp, pp, dp, mb, extras):
+        """Candidate axis + tile/NoC/chunk-step model for (N, K) strategy
+        columns — the shared trace of the grid and pinned bodies. `extras`
+        is None (grid mode: byte-identical trace to the pre-refactor body)
+        or (ep, recompute) columns, every extra term `where`-guarded so
+        ep=1/recompute=False lanes keep the legacy bits (the same guard
+        discipline as `chunk_eval.evaluate_step_batch`)."""
+        jnp = _jnp()
+        wl = self.wl
+        z, bwd_t, clock_t, dmod_t, p12, nl_t = zc
+
+        def fp(x):
+            return x + z
+
+        code = arrs["dataflow_code"].astype(jnp.int64)
+        mac = arrs["mac"].astype(jnp.int64)
+        buffer_kb = arrs["buffer_kb"]
+        buffer_bw = arrs["buffer_bw"].astype(jnp.int64)
+        noc_bw = arrs["noc_bw"]
+        total_cores = arrs["total_cores"].astype(jnp.int64)
 
         # --- candidate axis (build_candidate_axis mirror), shapes (N, K)
         chunks = pp * dp
@@ -391,6 +451,13 @@ class _EvalProgram:
         # --- chunk-level step model (evaluate_step_batch mirror) ---------
         nw2 = nw[:, None]
         bwd = bwd_t
+        ep2 = rc2 = None
+        if extras is not None:
+            ep2 = jnp.maximum(extras[0], 1)
+            rc2 = extras[1]
+            if self._train:
+                # recompute re-runs the forward in the backward: 3x -> 4x
+                bwd = jnp.where(rc2, jnp.float64(4.0), bwd_t)
         layers_per_stage = jnp.maximum(wl.n_layers // pp, 1)
         act_bytes = (mb_tokens * wl.d_model).astype(jnp.float64) * BYTES
         p_bytes = self._p_bytes
@@ -411,6 +478,11 @@ class _EvalProgram:
                           * total_cores[:, None] * nw2
                           / jnp.maximum(chunks, 1))
         w_bytes = p_bytes / jnp.maximum(pp, 1)
+        if ep2 is not None:
+            p_exp = self._p_exp
+            w_bytes = jnp.where(ep2 > 1,
+                                ((p_bytes - p_exp) + p_exp / ep2)
+                                / jnp.maximum(pp, 1), w_bytes)
         kv_total = self._kvtot_num / jnp.maximum(pp, 1)
         if wl.phase == "decode":
             kv_read, kv_write = kv_total, kv_total / max(wl.seq, 1)
@@ -442,6 +514,18 @@ class _EvalProgram:
         _s1 = fp(compute_s) + fp(tp_s)
         _s2 = _s1 + fp(pp_s)
         stage_s = _s2 + fp(dram_s)
+        a2a_vol = None
+        if ep2 is not None:
+            # MoE dispatch+combine all-to-all (chunk_eval mirror); the
+            # where-guard zeroes ep=1 lanes so stage_s + fp(0.0) keeps
+            # the legacy bits
+            topk = max(wl.moe_topk, 1)
+            a2a_vol = jnp.where(ep2 > 1,
+                                4.0 * (ep2 - 1) / ep2 * act_bytes * topk,
+                                0.0)
+            ep_s = (a2a_vol / jnp.maximum(ir_bw, 1.0) * layers_per_stage
+                    * bwd)
+            stage_s = stage_s + fp(ep_s)
         # fp() also blocks the `x / (a/b) -> x * (b/a)` divide rewrite on
         # iter_s below, which re-rounds against the NumPy association.
         eff = fp(mb_count / (mb_count + pp - 1.0))
@@ -471,6 +555,9 @@ class _EvalProgram:
                     * dmod_t * BYTES * 2 * wl.n_layers * mb_count * dp
                     * bwd)
         ir_bytes = fp(ir_bytes) + fp(p_bytes * 2 * (dp > 1))
+        if a2a_vol is not None:
+            ir_bytes = ir_bytes + fp(fp(fp(a2a_vol * nl_t) * mb_count)
+                                     * dp)
         e_ir = (ir_bytes * 8 * arrs["ir_energy_pj_per_bit"][:, None]
                 * p12)
         dram_bytes = dram_traffic * mb_count * dp
@@ -490,29 +577,23 @@ class _EvalProgram:
         thpt_out = jnp.where(bad, 0.0, throughput)
         energy_out = jnp.where(bad, 0.0, energy)
 
-        # --- per-design winner (first max wins, like np.argmax) ----------
-        live = feasible & selmask
-        thpt_rank = jnp.where(live, thpt_out, -1.0)
-        jw = jnp.argmax(thpt_rank, axis=1)
-
-        def at(a):
-            return jnp.take_along_axis(a, jw[:, None], axis=1)[:, 0]
-
-        return {
-            "any_feasible": live.any(axis=1),
-            "sel_g": at(sel),
-            "throughput": at(thpt_out),
-            "power_w": at(power),
-            "step_time_s": at(step_time_s),
-            "pipeline_eff": at(eff),
-            "energy_j": at(energy_out),
-            "compute_s": at(compute_s),
-            "tp_s": at(tp_s),
-            "pp_s": at(pp_s),
-            "dram_s": at(dram_s),
-            "dp_s": at(dp_s),
-            "mb_count": at(mb_count),
+        cand = {
+            "feasible": feasible,
+            "throughput": thpt_out,
+            "power_w": power,
+            "step_time_s": step_time_s,
+            "pipeline_eff": eff,
+            "energy_j": energy_out,
+            "compute_s": compute_s,
+            "tp_s": tp_s,
+            "pp_s": pp_s,
+            "dram_s": dram_s,
+            "dp_s": dp_s,
+            "mb_count": mb_count,
         }
+        if extras is not None:
+            cand["ep_s"] = ep_s
+        return cand
 
     # -- host-side entry points --------------------------------------------
 
@@ -616,6 +697,103 @@ class _EvalProgram:
                 sr, int(nw[i]), True))
         return res
 
+    # -- pinned-strategy (joint mode) entry points -------------------------
+
+    def _pad_strat(self, strat, npad: int):
+        n = len(strat[0])
+        if npad == n:
+            return strat
+        return tuple(np.pad(s, [(0, npad - n)], mode="edge") for s in strat)
+
+    def run_batch_pinned(self, arrs: Dict[str, np.ndarray], nw: np.ndarray,
+                         strat) -> Dict[str, np.ndarray]:
+        """Evaluate N (design, strategy) pairs; `strat` is the
+        (tp, pp, dp, mb, ep, recompute) array tuple."""
+        from jax.experimental import enable_x64
+
+        n = len(nw)
+        npad = self._bucket(n)
+        arrs, nwp = self._pad_rows(arrs, nw, npad)
+        strat = self._pad_strat(strat, npad)
+        with enable_x64():
+            ja = {k: _dev64(v) for k, v in arrs.items()}
+            jn = _dev64(nwp)
+            js = tuple(_dev64(s) for s in strat)
+            jz = self._zc()
+            if self.lanes > 1 and npad % self.lanes == 0:
+                shp = (self.lanes, npad // self.lanes)
+                out = self._pfn_pinned(
+                    {k: v.reshape(shp + v.shape[1:]) for k, v in ja.items()},
+                    jn.reshape(shp), jz,
+                    tuple(s.reshape(shp) for s in js))
+                out = {k: np.asarray(v).reshape(npad) for k, v in out.items()}
+                _LANE_STATS["n_lanes"] = self.lanes
+                _LANE_STATS["sharded_calls"] += 1
+                _LANE_STATS["rows_sharded"] += npad
+            else:
+                out = self._jit_pinned(ja, jn, jz, js)
+                out = {k: np.asarray(v) for k, v in out.items()}
+                _LANE_STATS["jit_calls"] += 1
+                _LANE_STATS["rows_jit"] += npad
+        return {k: v[:n] for k, v in out.items()}
+
+    def dispatch_fused_pinned(self, arrs: Dict[str, np.ndarray],
+                              nw: np.ndarray, strat, js_dev
+                              ) -> "_PendingPinnedEval":
+        """Fused gather + pinned evaluation of the joint-pool rows named by
+        the device-resident `js_dev` indices (joint-mode counterpart of
+        `dispatch_fused`)."""
+        from jax.experimental import enable_x64
+
+        n = len(nw)
+        npad = _pow2(max(n, 4))
+        arrs, nwp = self._pad_rows(arrs, nw, npad)
+        strat = self._pad_strat(strat, npad)
+        with enable_x64():
+            ja = {k: _dev64(v) for k, v in arrs.items()}
+            jn = _dev64(nwp)
+            js = tuple(_dev64(s) for s in strat)
+            out = self._fused_pinned_jit(ja, jn, self._zc(), js, js_dev)
+        _LANE_STATS["jit_calls"] += 1
+        _LANE_STATS["rows_jit"] += int(js_dev.shape[0])
+        return _PendingPinnedEval(self, out)
+
+    def results_from_pinned(self, out: Dict[str, np.ndarray],
+                            nw: np.ndarray, strategies
+                            ) -> List["EvalResult"]:
+        """Materialize pinned-mode EvalResults — the same construction the
+        NumPy `_finish` does in pinned mode (strategy_infeasible on a
+        failed point, breakdown gains "ep" only when the all-to-all term
+        is nonzero, matching `step_result_at`)."""
+        from repro.core.fidelity import EvalResult
+        res: List[EvalResult] = []
+        for i, s in enumerate(strategies):
+            if not bool(out["feasible"][i]):
+                res.append(EvalResult(0.0, float("inf"), s, None,
+                                      int(nw[i]), False,
+                                      "strategy_infeasible"))
+                continue
+            eff = float(out["pipeline_eff"][i])
+            mbc = float(out["mb_count"][i])
+            bd = {"compute": float(out["compute_s"][i]) * mbc / eff,
+                  "tp": float(out["tp_s"][i]) * mbc / eff,
+                  "pp": float(out["pp_s"][i]) * mbc / eff,
+                  "dram": float(out["dram_s"][i]) * mbc / eff,
+                  "dp": float(out["dp_s"][i])}
+            ep_v = float(out["ep_s"][i])
+            if ep_v:
+                bd["ep"] = ep_v * mbc / eff
+            sr = StepResult(
+                step_time_s=float(out["step_time_s"][i]),
+                throughput=float(out["throughput"][i]),
+                power_w=float(out["power_w"][i]),
+                pipeline_eff=eff, breakdown=bd,
+                energy_j=float(out["energy_j"][i]),
+                feasible=True, reason="")
+            res.append(EvalResult(sr.throughput, sr.power_w, s, sr,
+                                  int(nw[i]), True))
+        return res
+
 
 def _dev64(v: np.ndarray):
     jnp = _jnp()
@@ -640,6 +818,19 @@ class _PendingEval:
         return self.prog.results_from(host, nw_picks[:q])
 
 
+@dataclasses.dataclass
+class _PendingPinnedEval:
+    """In-flight fused pinned-strategy evaluation (joint mode)."""
+    prog: _EvalProgram
+    out: Dict
+
+    def finish(self, nw_picks: np.ndarray, strategies, q: int
+               ) -> List["EvalResult"]:
+        host = {k: np.asarray(v)[:q] for k, v in self.out.items()}
+        return self.prog.results_from_pinned(host, nw_picks[:q],
+                                             strategies[:q])
+
+
 # ---------------------------------------------------------------------------
 # public API
 # ---------------------------------------------------------------------------
@@ -659,6 +850,43 @@ def evaluate_batch_compiled(geom: DesignBatch, wl: LLMWorkload,
     nw = np.asarray(n_wafers, np.int64)
     out = prog.run_batch(geom_arrays(geom), nw)
     return prog.results_from(out, nw)
+
+
+def strategy_arrays(strategies) -> Tuple[np.ndarray, ...]:
+    """Columnize a list of Strategy into the (tp, pp, dp, mb, ep, recompute)
+    array tuple the pinned program consumes."""
+    return (np.array([s.tp for s in strategies], np.int64),
+            np.array([s.pp for s in strategies], np.int64),
+            np.array([s.dp for s in strategies], np.int64),
+            np.array([s.microbatches for s in strategies], np.int64),
+            np.array([s.ep for s in strategies], np.int64),
+            np.array([s.recompute for s in strategies], np.bool_))
+
+
+def evaluate_pinned_compiled(geom: DesignBatch, wl: LLMWorkload,
+                             n_wafers: np.ndarray, strategies,
+                             max_strategies: int = 24) -> List["EvalResult"]:
+    """Compiled joint-mode `evaluate_batch`: each design is evaluated under
+    its pinned Strategy (no grid argmin), bit-identical to the NumPy pinned
+    reference path in `AnalyticalBackend.evaluate_batch_ref`."""
+    prog = _program_for(wl, max_strategies)
+    nw = np.asarray(n_wafers, np.int64)
+    out = prog.run_batch_pinned(geom_arrays(geom), nw,
+                                strategy_arrays(strategies))
+    return prog.results_from_pinned(out, nw, strategies)
+
+
+def dispatch_fused_eval_pinned(pool_geom: DesignBatch, wl: LLMWorkload,
+                               nw_pool: np.ndarray, strategies, js_dev,
+                               max_strategies: int = 24
+                               ) -> _PendingPinnedEval:
+    """Joint-mode fused propose→evaluate: gather the pool rows named by
+    the device-resident `js_dev` indices together with their pinned
+    strategy columns, evaluate without a host round-trip."""
+    prog = _program_for(wl, max_strategies)
+    return prog.dispatch_fused_pinned(geom_arrays(pool_geom),
+                                      np.asarray(nw_pool, np.int64),
+                                      strategy_arrays(strategies), js_dev)
 
 
 def dispatch_fused_eval(pool_geom: DesignBatch, wl: LLMWorkload,
@@ -728,7 +956,8 @@ def warm_evaluator_kernels(wl: LLMWorkload, n_designs_max: int = 4,
 
 
 __all__ = [
-    "clear_compiled_programs", "dispatch_fused_eval", "enabled",
-    "evaluate_batch_compiled", "geom_arrays", "lane_stats",
-    "warm_evaluator_kernels",
+    "clear_compiled_programs", "dispatch_fused_eval",
+    "dispatch_fused_eval_pinned", "enabled", "evaluate_batch_compiled",
+    "evaluate_pinned_compiled", "geom_arrays", "lane_stats",
+    "strategy_arrays", "warm_evaluator_kernels",
 ]

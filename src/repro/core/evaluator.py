@@ -153,9 +153,17 @@ def gnn_params_digest(gnn_params) -> Optional[str]:
 
 
 def _cache_key(design: WSCDesign, wl: LLMWorkload, fidelity: str,
-               n_wafers: int, max_strategies: int, gnn_params) -> Tuple:
+               n_wafers: int, max_strategies: int, gnn_params,
+               strategy=None) -> Tuple:
+    # Grid-mode keys keep the historical 6-tuple shape so existing disk
+    # caches stay valid; joint mode (pinned Strategy, frozen/hashable)
+    # appends the strategy so the same design under two strategies never
+    # aliases one entry.
+    if strategy is None:
+        return (design, wl, fidelity, n_wafers, max_strategies,
+                gnn_params_digest(gnn_params))
     return (design, wl, fidelity, n_wafers, max_strategies,
-            gnn_params_digest(gnn_params))
+            gnn_params_digest(gnn_params), strategy)
 
 
 def get_eval_cache_backend() -> EvalCacheBackend:
@@ -219,7 +227,11 @@ def evaluate_design(design: WSCDesign, wl: LLMWorkload,
     if hit is not None:
         return hit
 
-    strategies = enumerate_strategies(design, wl, n_wafers=nw)
+    # memory_model="grid": the scalar path must stay element-identical to
+    # the batched grid (`feasible_strategy_arrays`), which bakes the frozen
+    # legacy memory check; the recompute-aware v2 model is the joint path.
+    strategies = enumerate_strategies(design, wl, n_wafers=nw,
+                                      memory_model="grid")
     strategies = sorted(strategies, key=_strategy_order)[:max_strategies]
 
     graph_cache: Dict[Tuple[int, int, int], Tuple[ChunkGraph, float]] = {}
@@ -342,6 +354,95 @@ def evaluate_pool_fused(pool_designs: Sequence[WSCDesign], wl: LLMWorkload,
     return js, results
 
 
+# ---------------------------------------------------------------------------
+# joint (strategy-pinned) path: strategy–architecture co-exploration
+# (DESIGN.md §13) — each point carries its own Strategy, no grid argmin
+# ---------------------------------------------------------------------------
+
+
+def evaluate_joint_batch(points, wl: LLMWorkload,
+                         fidelity: Fidelity = "analytical",
+                         gnn_params: Optional[Dict] = None,
+                         n_wafers: Optional[Union[int, np.ndarray]] = None,
+                         max_strategies: int = 24) -> List[EvalResult]:
+    """Evaluate N (design, strategy) joint points at once: each design is
+    scored under its pinned Strategy (`JointDesign.strategy`), skipping the
+    per-design strategy-grid argmin. Same cache protocol as
+    `evaluate_design_batch`; keys carry the pinned Strategy so a design
+    evaluated under two strategies occupies two entries."""
+    backend = get_backend(fidelity)
+    points = list(points)
+    if not points:
+        return []
+    designs = [p.design for p in points]
+    strategies = [p.strategy for p in points]
+
+    geom0 = DesignBatch.from_designs(designs)
+    if n_wafers is None:
+        nw = _wafers_for_budget_batch(geom0, wl)
+    else:
+        nw = np.broadcast_to(np.asarray(n_wafers, np.int64),
+                             (len(points),)).copy()
+
+    keys = [_cache_key(d, wl, backend.name, int(nw[i]), max_strategies,
+                       gnn_params, strategy=strategies[i])
+            for i, d in enumerate(designs)]
+    results: List[Optional[EvalResult]] = [_BACKEND.get(k) for k in keys]
+    todo = [i for i, r in enumerate(results) if r is None]
+    if todo:
+        fresh = backend.evaluate_batch(
+            geom0.take(np.asarray(todo)), wl, nw[todo], max_strategies,
+            gnn_params, strategies=[strategies[i] for i in todo])
+        for i, r in zip(todo, fresh):
+            results[i] = r
+        _BACKEND.set_many([(keys[i], results[i]) for i in todo])
+    return results            # type: ignore[return-value]
+
+
+def evaluate_pool_fused_joint(pool_points, wl: LLMWorkload,
+                              js_dev, q_eff: int,
+                              gnn_params: Optional[Dict] = None,
+                              n_wafers: Optional[int] = None,
+                              max_strategies: int = 24
+                              ) -> Tuple[List[int], List[EvalResult]]:
+    """Joint-mode counterpart of `evaluate_pool_fused`: the candidate pool
+    is (design, strategy) points, and the fused program gathers both the
+    geometry rows and the pinned strategy columns by the device-resident
+    pick indices. Same get-per-pick / batched set_many cache protocol."""
+    from repro.core import eval_compiled
+
+    points = list(pool_points)
+    designs = [p.design for p in points]
+    strategies = [p.strategy for p in points]
+    geom = DesignBatch.from_designs(designs)
+    if n_wafers is None:
+        nw = _wafers_for_budget_batch(geom, wl)
+    else:
+        nw = np.broadcast_to(np.asarray(n_wafers, np.int64),
+                             (len(points),)).copy()
+    pending = eval_compiled.dispatch_fused_eval_pinned(
+        geom, wl, nw, strategies, js_dev, max_strategies=max_strategies)
+    js_all = np.asarray(js_dev)
+    js = [int(j) for j in js_all[:q_eff]]
+    fresh = pending.finish(nw[js_all], [strategies[j] for j in js_all],
+                           q_eff)
+    keys = [_cache_key(designs[j], wl, "analytical", int(nw[j]),
+                       max_strategies, gnn_params,
+                       strategy=strategies[j]) for j in js]
+    results: List[EvalResult] = []
+    new = []
+    for k, r in zip(keys, fresh):
+        hit = _BACKEND.get(k)
+        if hit is None:
+            results.append(r)
+            new.append((k, r))
+        else:
+            results.append(hit)
+    if new:
+        _BACKEND.set_many(new)
+    return js, results
+
+
 def evaluate_objectives(design: WSCDesign, wl: LLMWorkload,
                         fidelity: Fidelity = "analytical",
                         gnn_params: Optional[Dict] = None
@@ -399,9 +500,9 @@ def batched_objectives(wl: LLMWorkload, fidelity: Fidelity = "analytical",
 __all__ = [
     "EvalResult", "Fidelity", "batched_objectives", "clear_eval_cache",
     "configure_eval_cache", "eval_cache_stats", "evaluate_design",
-    "evaluate_design_batch", "evaluate_objectives",
+    "evaluate_design_batch", "evaluate_joint_batch", "evaluate_objectives",
     "evaluate_objectives_batch", "evaluate_pool_fused",
-    "evaluate_serving_batch",
+    "evaluate_pool_fused_joint", "evaluate_serving_batch",
     "get_backend", "get_eval_cache_backend", "gnn_params_digest",
     "gnn_params_token", "registered_backends", "serving_objectives",
     "set_eval_cache_backend", "wafers_for_budget",

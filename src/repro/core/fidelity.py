@@ -85,7 +85,8 @@ class FidelityBackend(Protocol):
 
     def evaluate_batch(self, geom: DesignBatch, wl: LLMWorkload,
                        n_wafers: np.ndarray, max_strategies: int = 24,
-                       gnn_params: Optional[Dict] = None
+                       gnn_params: Optional[Dict] = None,
+                       strategies: Optional[List[Strategy]] = None
                        ) -> List[EvalResult]: ...
 
 
@@ -143,29 +144,50 @@ class CandidateAxis:
     out_bytes: np.ndarray          # (n_ops, C) producer output bytes
     sram_bits_layer: np.ndarray    # (C,)
     noc_bytes_layer: np.ndarray    # (C,)
+    # pinned-strategy (joint) mode: the original Strategy per design plus
+    # the extra knob columns; None in grid mode (ISSUE 9)
+    pinned: Optional[List[Strategy]] = None
+    ep: Optional[np.ndarray] = None
+    rc: Optional[np.ndarray] = None
 
 
 def build_candidate_axis(geom: DesignBatch, wl: LLMWorkload, nw: np.ndarray,
-                         max_strategies: int) -> CandidateAxis:
+                         max_strategies: int,
+                         strategies: Optional[List[Strategy]] = None
+                         ) -> CandidateAxis:
     """Flatten per-design strategy lists and run the tile stage — the part
     of the pipeline every fidelity shares (DESIGN.md §4). Per-core tiles are
     sized by the TRUE chunk grid; the NoC grid is the capped representative
-    one (compile_chunk's hierarchical scale reduction)."""
+    one (compile_chunk's hierarchical scale reduction).
+
+    When `strategies` is given (joint mode, one Strategy per design) the
+    grid enumeration is skipped entirely: the candidate axis is exactly one
+    pinned candidate per design, with the ep/recompute extras threaded
+    through to the chunk-level model."""
     designs = geom.designs
 
-    sram_total = geom.buffer_kb * 1024.0 * geom.total_cores * nw
-    dram_total = geom.dram_gb_per_reticle * 1e9 * geom.n_reticles * nw
-    strat_arrays = [
-        feasible_strategy_arrays(wl, int(geom.total_cores[i] * nw[i]),
-                                 float(sram_total[i] + dram_total[i]),
-                                 max_strategies)
-        for i in range(len(designs))
-    ]
-    counts = np.array([len(a) for a in strat_arrays], np.int64)
-    offsets = np.concatenate([[0], np.cumsum(counts)])
-    didx = np.repeat(np.arange(len(designs), dtype=np.int64), counts)
-    sa = np.concatenate(strat_arrays, axis=0)
-    tp, pp, dp, mb = sa[:, 0], sa[:, 1], sa[:, 2], sa[:, 3]
+    if strategies is not None:
+        counts = np.ones(len(designs), np.int64)
+        offsets = np.arange(len(designs) + 1, dtype=np.int64)
+        didx = np.arange(len(designs), dtype=np.int64)
+        tp = np.array([s.tp for s in strategies], np.int64)
+        pp = np.array([s.pp for s in strategies], np.int64)
+        dp = np.array([s.dp for s in strategies], np.int64)
+        mb = np.array([s.microbatches for s in strategies], np.int64)
+    else:
+        sram_total = geom.buffer_kb * 1024.0 * geom.total_cores * nw
+        dram_total = geom.dram_gb_per_reticle * 1e9 * geom.n_reticles * nw
+        strat_arrays = [
+            feasible_strategy_arrays(wl, int(geom.total_cores[i] * nw[i]),
+                                     float(sram_total[i] + dram_total[i]),
+                                     max_strategies)
+            for i in range(len(designs))
+        ]
+        counts = np.array([len(a) for a in strat_arrays], np.int64)
+        offsets = np.concatenate([[0], np.cumsum(counts)])
+        didx = np.repeat(np.arange(len(designs), dtype=np.int64), counts)
+        sa = np.concatenate(strat_arrays, axis=0)
+        tp, pp, dp, mb = sa[:, 0], sa[:, 1], sa[:, 2], sa[:, 3]
 
     cg = geom.take(didx)                     # candidate-axis geometry
     nw_c = nw[didx]
@@ -195,18 +217,36 @@ def build_candidate_axis(geom: DesignBatch, wl: LLMWorkload, nw: np.ndarray,
         tp=tp, pp=pp, dp=dp, mb=mb, mb_tokens=mb_tokens,
         cores_per_chunk=cores_per_chunk, gh=gh, gw=gw, n_cores=n_cores,
         tiles=tiles, out_bytes=out_bytes, sram_bits_layer=sram_bits_layer,
-        noc_bytes_layer=noc_bytes_layer)
+        noc_bytes_layer=noc_bytes_layer,
+        pinned=list(strategies) if strategies is not None else None,
+        ep=(np.array([s.ep for s in strategies], np.int64)
+            if strategies is not None else None),
+        rc=(np.array([s.recompute for s in strategies], bool)
+            if strategies is not None else None))
 
 
 def _finish(ax: CandidateAxis, wl: LLMWorkload, lat: np.ndarray
             ) -> List[EvalResult]:
     """Chunk-level stage + per-design best-feasible reduction (first max
     wins, matching the scalar search order — candidates are already
-    strategy-sorted)."""
+    strategy-sorted). In pinned mode (ax.pinned) there is exactly one
+    candidate per design and no argmin: the EvalResult carries the original
+    searched Strategy, infeasible points report "strategy_infeasible"."""
     step = evaluate_step_batch(ax.cg, wl, ax.tp, ax.pp, ax.dp, ax.mb, lat,
                                ax.sram_bits_layer, ax.noc_bytes_layer,
-                               ax.nw_c)
+                               ax.nw_c, ep=ax.ep, recompute=ax.rc)
     results: List[EvalResult] = []
+    if ax.pinned is not None:
+        for i, s in enumerate(ax.pinned):
+            if not step["feasible"][i]:
+                results.append(EvalResult(0.0, float("inf"), s, None,
+                                          int(ax.nw[i]), False,
+                                          "strategy_infeasible"))
+                continue
+            sr = step_result_at(step, i)
+            results.append(EvalResult(sr.throughput, sr.power_w, s, sr,
+                                      int(ax.nw[i]), True))
+        return results
     thpt = np.where(step["feasible"], step["throughput"], -1.0)
     for i in range(len(ax.geom.designs)):
         lo, hi = ax.offsets[i], ax.offsets[i + 1]
@@ -405,22 +445,28 @@ class AnalyticalBackend:
 
     def evaluate_batch(self, geom: DesignBatch, wl: LLMWorkload,
                        n_wafers: np.ndarray, max_strategies: int = 24,
-                       gnn_params: Optional[Dict] = None
+                       gnn_params: Optional[Dict] = None,
+                       strategies: Optional[List[Strategy]] = None
                        ) -> List[EvalResult]:
         from repro.core import eval_compiled
         if eval_compiled.enabled():
+            if strategies is not None:
+                return eval_compiled.evaluate_pinned_compiled(
+                    geom, wl, np.asarray(n_wafers, np.int64), strategies)
             return eval_compiled.evaluate_batch_compiled(
                 geom, wl, np.asarray(n_wafers, np.int64), max_strategies)
         return self.evaluate_batch_ref(geom, wl, n_wafers, max_strategies,
-                                       gnn_params)
+                                       gnn_params, strategies)
 
     def evaluate_batch_ref(self, geom: DesignBatch, wl: LLMWorkload,
                            n_wafers: np.ndarray, max_strategies: int = 24,
-                           gnn_params: Optional[Dict] = None
+                           gnn_params: Optional[Dict] = None,
+                           strategies: Optional[List[Strategy]] = None
                            ) -> List[EvalResult]:
         """NumPy reference pipeline (the pre-compiled implementation,
         kept verbatim as the oracle for the jitted path)."""
-        ax = build_candidate_axis(geom, wl, n_wafers, max_strategies)
+        ax = build_candidate_axis(geom, wl, n_wafers, max_strategies,
+                                  strategies)
         lat = chunk_latency_cycles_closed(ax.tiles["cycles"], ax.out_bytes,
                                           ax.gh, ax.gw, ax.cg.noc_bw)
         return _finish(ax, wl, lat)
@@ -440,12 +486,14 @@ class GNNBackend:
 
     def evaluate_batch(self, geom: DesignBatch, wl: LLMWorkload,
                        n_wafers: np.ndarray, max_strategies: int = 24,
-                       gnn_params: Optional[Dict] = None
+                       gnn_params: Optional[Dict] = None,
+                       strategies: Optional[List[Strategy]] = None
                        ) -> List[EvalResult]:
         if gnn_params is None:
             return get_backend("analytical").evaluate_batch(
-                geom, wl, n_wafers, max_strategies)
-        ax = build_candidate_axis(geom, wl, n_wafers, max_strategies)
+                geom, wl, n_wafers, max_strategies, strategies=strategies)
+        ax = build_candidate_axis(geom, wl, n_wafers, max_strategies,
+                                  strategies)
         lat = _graph_latency(
             ax, lambda b: _gnn_lane_makespans(gnn_params, b))
         return _finish(ax, wl, lat)
@@ -462,9 +510,11 @@ class SimBackend:
 
     def evaluate_batch(self, geom: DesignBatch, wl: LLMWorkload,
                        n_wafers: np.ndarray, max_strategies: int = 24,
-                       gnn_params: Optional[Dict] = None
+                       gnn_params: Optional[Dict] = None,
+                       strategies: Optional[List[Strategy]] = None
                        ) -> List[EvalResult]:
-        ax = build_candidate_axis(geom, wl, n_wafers, max_strategies)
+        ax = build_candidate_axis(geom, wl, n_wafers, max_strategies,
+                                  strategies)
         lat = _graph_latency(ax, _sim_lane_makespans)
         return _finish(ax, wl, lat)
 

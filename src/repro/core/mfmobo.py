@@ -114,6 +114,76 @@ def _valid_candidates(rng: np.random.Generator, n: int,
         "everything; loosen the design-space bounds or raise max_tries")
 
 
+def _grid_seed_strategies(designs, wl, space):
+    """Heuristic strategy seeds for joint sampling: each design's
+    first-feasible row of the sorted strategy grid (what grid-mode
+    evaluation would try first), as (N, 7) encoded strategy columns plus a
+    found-mask. Vectorized over the cached `_strategy_grid`; nw=1 — a seed,
+    not a resource decision."""
+    from repro.core.compiler import Strategy, _strategy_grid
+    from repro.core.design_space import DesignBatch
+
+    g = _strategy_grid(wl)
+    db = DesignBatch.from_designs(list(designs))
+    tc = db.total_cores.astype(np.float64)
+    mem = (db.buffer_kb * 1024.0 * db.total_cores
+           + db.dram_gb_per_reticle * 1e9 * db.n_reticles)
+    o = g["order"]
+    m = ((g["chunks"][None, o] * g["tp"][None, o] <= tc[:, None])
+         & (g["tp"][None, o] <= tc[:, None])
+         & (g["need"][None, o] <= mem[:, None]))
+    found = m.any(axis=1)
+    idx = o[np.argmax(m, axis=1)]
+    enc = np.zeros((len(designs), space.n_dims))
+    for i in np.flatnonzero(found):
+        s = Strategy(int(g["tp"][idx[i]]), int(g["pp"][idx[i]]),
+                     int(g["dp"][idx[i]]), int(g["mb"][idx[i]]))
+        enc[i] = space.encode_strategy(s)
+    return enc, found
+
+
+def _valid_candidates_joint(rng: np.random.Generator, n: int, space, wl,
+                            max_tries: int = 8
+                            ) -> Tuple[np.ndarray, List]:
+    """Joint-mode `_valid_candidates`: sample (13 + 7)-dim joint points,
+    seed every other draw's strategy columns from the grid heuristic
+    (`enumerate_strategies` demoted to seeding — the sorted grid's first
+    feasible row), validate architecture + strategy together
+    (`validate_joint_batch`, `repro.dist` oracle included), and return
+    (encoded points, JointDesigns with spares resolved)."""
+    from repro.core.design_space import (DIMS, JointDesign,
+                                         decode_joint_batch, sample_joint)
+    from repro.core.validator import validate_joint_batch
+
+    nd = len(DIMS)
+    xs, pts = [], []
+    n_drawn = 0
+    for _ in range(max_tries):
+        us = sample_joint(rng, n, space)
+        n_drawn += len(us)
+        batch = decode_joint_batch(us, space)
+        seeded = list(range(0, len(batch), 2))
+        enc, found = _grid_seed_strategies(
+            [batch[i].design for i in seeded], wl, space)
+        for j, i in enumerate(seeded):
+            if found[j]:
+                us[i, nd:] = enc[j]
+                batch[i] = JointDesign(
+                    batch[i].design, space.decode_strategy(us[i, nd:]))
+        for u, p, r in zip(us, batch, validate_joint_batch(batch, wl)):
+            if r.ok:
+                xs.append(u)
+                pts.append(JointDesign(r.design, p.strategy))
+            if len(xs) >= n:
+                return np.array(xs), pts
+    rate = len(xs) / max(n_drawn, 1)
+    raise RuntimeError(
+        f"joint-space sampling produced only {len(xs)}/{n} valid "
+        f"candidates after {max_tries} rounds of {n} draws (acceptance "
+        f"rate {rate:.1%}) — loosen the strategy-space bounds or raise "
+        "max_tries")
+
+
 def _fit_models(X: np.ndarray, Y: np.ndarray) -> Tuple[GP, GP]:
     # one vmapped XLA call refits both objective surrogates on the shared X
     return GP.fit_pair(X, (np.log1p(np.maximum(Y[:, 0], 0.0)),

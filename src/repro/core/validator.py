@@ -157,3 +157,63 @@ def validate_batch(designs: Sequence[WSCDesign],
                 True, "", dataclasses.replace(d, spares_per_row=int(spares[i])),
                 float(wy[i])))
     return out
+
+
+# ---------------------------------------------------------------------------
+# joint (design, strategy) validation — strategy–architecture co-exploration
+# ---------------------------------------------------------------------------
+
+
+def validate_joint_batch(points, wl, peak_power_w: float = C.WAFER_POWER_W,
+                         use_oracle: bool = True) -> List[ValidationResult]:
+    """Vectorized validation of N `JointDesign` points: the architecture
+    half goes through `validate_batch` unchanged (same constraint order and
+    reasons), then surviving points get their pinned Strategy checked —
+    static legality first (vectorized), then the `repro.dist` shardability
+    oracle (`param_specs`/`batch_specs` instantiable on a (dp, tp) mesh;
+    memoized per unique (tp, dp, ep), so N points cost a handful of
+    spec-tree builds). Strategy failure reasons:
+
+        "strategy_pp"           pp exceeds the workload's layer count
+        "strategy_tokens"       dp x microbatches over-splits the step
+        "strategy_ep"/"strategy_unshardable"/...  oracle verdicts,
+            prefixed "strategy_" (ep_experts, dp_batch, tp_dead)
+
+    Resource fit (cores, memory capacity) is the evaluator's job — the
+    step model decides it per system size; the validator is static
+    legality only."""
+    points = list(points)
+    if not points:
+        return []
+    import numpy as _np
+
+    arch = validate_batch([p.design for p in points],
+                          peak_power_w=peak_power_w)
+
+    tp = _np.array([p.strategy.tp for p in points], _np.int64)
+    pp = _np.array([p.strategy.pp for p in points], _np.int64)
+    dp = _np.array([p.strategy.dp for p in points], _np.int64)
+    mb = _np.array([p.strategy.microbatches for p in points], _np.int64)
+    mb_count = mb if wl.phase == "train" else _np.ones_like(mb)
+
+    reason = _np.full(len(points), "", object)
+    reason[(reason == "") & (pp > wl.n_layers)] = "strategy_pp"
+    reason[(reason == "") & (dp * mb_count > wl.tokens_per_step())] = \
+        "strategy_tokens"
+
+    out: List[ValidationResult] = []
+    for i, (p, ar) in enumerate(zip(points, arch)):
+        if not ar.ok:
+            out.append(ar)
+            continue
+        why = str(reason[i])
+        if not why and use_oracle:
+            from repro.dist import oracle
+            ok, o_why = oracle.strategy_shardable(wl, p.strategy)
+            if not ok:
+                why = f"strategy_{o_why}"
+        if why:
+            out.append(ValidationResult(False, why))
+        else:
+            out.append(ar)
+    return out

@@ -55,6 +55,14 @@ class LLMWorkload:
         per = 4 * D * D + 3 * D * F * max(self.moe_experts, 1)
         return (L * per + 2 * self.vocab * D) * BYTES
 
+    def expert_params_bytes(self) -> float:
+        """Bytes of MoE expert weights (the `ep`-shardable slice of
+        `params_bytes`); 0 for dense models."""
+        if not self.moe_experts:
+            return 0.0
+        D, F, L = self.d_model, self.d_ff, self.n_layers
+        return L * 3 * D * F * self.moe_experts * BYTES
+
     def active_params(self) -> float:
         D, F, L = self.d_model, self.d_ff, self.n_layers
         e = self.moe_topk if self.moe_experts else 1

@@ -153,6 +153,13 @@ class CampaignSpec:
     checkpoint_keep: int = 3                   # retained ckpt generations
     async_depth: int = 0                       # in-flight eval batches;
                                                # 0 = synchronous loop
+    # strategy-architecture co-exploration (DESIGN.md §13): "grid" keeps
+    # the per-design strategy-grid argmin (historical behavior, trace
+    # replay contract); "joint" appends the 7 strategy axes to the search
+    # encoding and pins each candidate's Strategy
+    strategy_mode: str = "grid"
+    strategy_space: Optional[Dict] = None      # StrategySpace.to_json()
+                                               # bounds; None = derived
 
     def __post_init__(self):
         if not self.objectives:
@@ -185,6 +192,18 @@ class CampaignSpec:
                     f"{HETERO_GRANULARITIES}")
         if self.fidelity.calibrate_on_handover and self.fidelity.f0 != "gnn":
             raise ValueError("calibrate_on_handover requires f0='gnn'")
+        if self.strategy_mode not in ("grid", "joint"):
+            raise ValueError(f"strategy_mode {self.strategy_mode!r} not in "
+                             "('grid', 'joint')")
+        if self.strategy_mode == "joint":
+            if self.scenario not in ("train", "inference"):
+                raise ValueError(
+                    "strategy_mode='joint' supports the train/inference "
+                    f"scenarios (got {self.scenario!r}); serving/hetero "
+                    "objectives do not pin strategies yet")
+            if self.strategy_space is not None:
+                from repro.core.design_space import StrategySpace
+                StrategySpace.from_json(self.strategy_space)  # raises on bad
         self.loop_config().validate()
         resolve_workload(self)                       # raises on bad refs
         for c in self.constraints:
@@ -258,6 +277,12 @@ class CampaignSpec:
             "checkpoint_keep": self.checkpoint_keep,
             "async_depth": self.async_depth,
         }
+        # emitted only when non-default, so pre-joint spec JSON (and the
+        # fixtures diffing it) stays byte-identical
+        if self.strategy_mode != "grid":
+            d["strategy_mode"] = self.strategy_mode
+        if self.strategy_space is not None:
+            d["strategy_space"] = dict(self.strategy_space)
         if self.workload_overrides:
             d["workload_overrides"] = dict(self.workload_overrides)
         if self.serving is not None:
@@ -342,6 +367,22 @@ def resolve_workload(spec: CampaignSpec) -> LLMWorkload:
     if bad:
         raise ValueError(f"unsupported workload overrides: {sorted(bad)}")
     return dataclasses.replace(wl, **ov) if ov else wl
+
+
+# the densest wafer in the design space (32x32 cores x 12x12 reticles
+# ~ 1.5e5 cores) on a handful of area-matched wafers — the default system
+# bound the derived strategy caps assume when a spec doesn't pin bounds
+DEFAULT_JOINT_CORES = 1 << 19
+
+
+def resolve_strategy_space(spec: CampaignSpec, wl: LLMWorkload):
+    """The joint campaign's `StrategySpace`: explicit bounds from the spec
+    when given, else derived from the workload and the largest system under
+    search (`StrategySpace.for_workload`)."""
+    from repro.core.design_space import StrategySpace
+    if spec.strategy_space is not None:
+        return StrategySpace.from_json(spec.strategy_space)
+    return StrategySpace.for_workload(wl, DEFAULT_JOINT_CORES)
 
 
 # ---------------------------------------------------------------------------
@@ -433,8 +474,16 @@ class Campaign:
             self.f0.load_stats(_objective_stats.get("f0", {}))
             if self.f1 is not None:
                 self.f1.load_stats(_objective_stats.get("f1", {}))
+        candidate_fn = None
+        if spec.strategy_mode == "joint":
+            from repro.core.mfmobo import _valid_candidates_joint
+            space = resolve_strategy_space(spec, self.wl)
+            wl = self.wl
+            candidate_fn = (lambda rng, n:
+                            _valid_candidates_joint(rng, n, space, wl))
         self.loop = ExplorationLoop(spec.loop_config(), self.f0, f1=self.f1,
-                                    on_handover=on_handover, state=_state)
+                                    on_handover=on_handover, state=_state,
+                                    candidate_fn=candidate_fn)
 
     # -- construction helpers ----------------------------------------------
 
@@ -471,7 +520,8 @@ class Campaign:
         if spec.scenario in ("train", "inference"):
             return EvaluatorObjective(
                 self.wl, fidelity, params_fn=params_fn,
-                max_strategies=spec.max_strategies, **kw)
+                max_strategies=spec.max_strategies,
+                strategy_mode=spec.strategy_mode, **kw)
         sv = spec.serving
         if spec.scenario == "serving":
             return ServingObjective(
@@ -571,6 +621,6 @@ def run_campaign(spec: CampaignSpec, **kw) -> CampaignResult:
 
 __all__ = [
     "Campaign", "CampaignResult", "CampaignSpec", "FidelitySchedule",
-    "HeteroSpec", "SCENARIOS", "ServingSpec", "resolve_workload",
-    "run_campaign",
+    "HeteroSpec", "SCENARIOS", "ServingSpec", "resolve_strategy_space",
+    "resolve_workload", "run_campaign",
 ]

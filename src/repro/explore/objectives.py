@@ -233,8 +233,12 @@ class EvaluatorObjective(Objective):
                  constraints: Sequence[ConstraintSpec] = (),
                  max_strategies: int = 24,
                  n_wafers: Optional[int] = None,
-                 penalty: Tuple[float, float] = PENALTY):
+                 penalty: Tuple[float, float] = PENALTY,
+                 strategy_mode: str = "grid"):
         super().__init__(objectives, constraints, penalty, scenario="train")
+        if strategy_mode not in ("grid", "joint"):
+            raise ValueError(f"strategy_mode {strategy_mode!r} not in "
+                             "('grid', 'joint')")
         self.wl = wl
         self.backend = get_backend(fidelity)
         self.fidelity = self.backend.name
@@ -242,11 +246,21 @@ class EvaluatorObjective(Objective):
         self._params_fn = params_fn
         self.max_strategies = max_strategies
         self.n_wafers = n_wafers
+        self.strategy_mode = strategy_mode
 
     def gnn_params(self) -> Optional[Dict]:
         return self._params_fn() if self._params_fn else self._gnn_params
 
     def metrics(self, designs: List[WSCDesign]) -> List[Dict[str, float]]:
+        # joint mode: `designs` are JointDesign points — each is scored
+        # under its pinned Strategy, no per-design grid argmin
+        if self.strategy_mode == "joint":
+            from repro.core.evaluator import evaluate_joint_batch
+            rs = evaluate_joint_batch(
+                designs, self.wl, fidelity=self.backend,
+                gnn_params=self.gnn_params(), n_wafers=self.n_wafers,
+                max_strategies=self.max_strategies)
+            return self.metrics_from_results(rs)
         from repro.core.evaluator import evaluate_design_batch
         rs = evaluate_design_batch(
             designs, self.wl, fidelity=self.backend,
@@ -281,6 +295,13 @@ class EvaluatorObjective(Objective):
         `js_dev` (the compiled acquire scan's output) through the fused
         gather+evaluate program; returns (pick indices, folded ys) —
         bit-identical to `eval_many([pool_designs[j] for j in js])`."""
+        if self.strategy_mode == "joint":
+            from repro.core.evaluator import evaluate_pool_fused_joint
+            js, rs = evaluate_pool_fused_joint(
+                list(pool_designs), self.wl, js_dev, q_eff,
+                gnn_params=self.gnn_params(), n_wafers=self.n_wafers,
+                max_strategies=self.max_strategies)
+            return js, self.fold_metrics(self.metrics_from_results(rs))
         from repro.core.evaluator import evaluate_pool_fused
         js, rs = evaluate_pool_fused(
             list(pool_designs), self.wl, js_dev, q_eff,

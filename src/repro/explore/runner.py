@@ -189,7 +189,8 @@ class ExplorationLoop:
 
     def __init__(self, cfg: LoopConfig, f0, f1=None, *,
                  on_handover: Optional[Callable] = None,
-                 state: Optional[LoopState] = None):
+                 state: Optional[LoopState] = None,
+                 candidate_fn: Optional[Callable] = None):
         self.cfg = cfg.validate()
         self.f0: Objective = as_objective(f0)
         self.f1: Optional[Objective] = (as_objective(f1)
@@ -197,6 +198,11 @@ class ExplorationLoop:
         if cfg.strategy == "mfmobo" and self.f1 is None:
             raise ValueError("mfmobo needs a low-fidelity objective f1")
         self.on_handover = on_handover
+        # joint mode (strategy-architecture co-exploration): campaigns
+        # install a sampler producing (encoded xs, JointDesign) pairs; the
+        # default None keeps the grid-mode `_valid_candidates` call (and
+        # its rng stream) byte-for-byte
+        self._candidate_fn = candidate_fn
         self.ref = hv_ref(cfg.peak_power)
         self.state = state if state is not None else _fresh_state(cfg)
         self._executor: Optional[ThreadPoolExecutor] = None
@@ -265,6 +271,11 @@ class ExplorationLoop:
 
     def _objective(self, stage: str) -> Objective:
         return self.f0 if stage == "f0" else self.f1
+
+    def _candidates(self, n: int):
+        if self._candidate_fn is not None:
+            return self._candidate_fn(self.state.rng, n)
+        return _valid_candidates(self.state.rng, n)
 
     def _dispatch(self, xs, designs, stage: str) -> None:
         st = self.state
@@ -395,7 +406,7 @@ class ExplorationLoop:
     def _init_step(self):
         st, cfg = self.state, self.cfg
         if cfg.strategy == "mfmobo":
-            init_x, init_d = _valid_candidates(st.rng, cfg.d0 + cfg.d1)
+            init_x, init_d = self._candidates(cfg.d0 + cfg.d1)
             ys1 = self._eval(self.f1, init_d[:cfg.d1], "f1")
             for x, d, y in zip(init_x[:cfg.d1], init_d[:cfg.d1], ys1):
                 st.X1.append(x)
@@ -413,14 +424,14 @@ class ExplorationLoop:
                 st.hist_y.append(y)
                 self._record(x, d, y)
         elif cfg.strategy == "mobo":
-            init_x, init_d = _valid_candidates(st.rng, cfg.d0)
+            init_x, init_d = self._candidates(cfg.d0)
             for x, d, y in zip(init_x, init_d,
                                self._eval(self.f0, init_d, "f0")):
                 st.X0.append(x)
                 st.Y0.append(y)
                 self._record(x, d, y)
         else:                                         # random
-            xs, ds = _valid_candidates(st.rng, cfg.N0)
+            xs, ds = self._candidates(cfg.N0)
             st.pending = [(x, d) for x, d in zip(xs, ds)]
         st.initialized = True
 
@@ -439,7 +450,7 @@ class ExplorationLoop:
                                   total) if b > st.done]
         q_eff = max(1, min(cfg.q, min(boundaries) - st.done))
 
-        cand_x, cand_d = _valid_candidates(st.rng, cfg.n_candidates)
+        cand_x, cand_d = self._candidates(cfg.n_candidates)
         if use_m0 and len(st.X0) >= 2:
             models = _fit_models(np.array(st.X0), np.array(st.Y0))
             ev = obj_space(st.Y0)
@@ -471,7 +482,7 @@ class ExplorationLoop:
         st, cfg = self.state, self.cfg
         q_eff = max(1, min(cfg.q, cfg.N0 - cfg.d0 - st.done))
         models = _fit_models(np.array(st.X0), np.array(st.Y0))
-        cand_x, cand_d = _valid_candidates(st.rng, cfg.n_candidates)
+        cand_x, cand_d = self._candidates(cfg.n_candidates)
         ev = obj_space(st.Y0)
         if self._fused_ok(self.f0):
             js, ys = self._acquire_eval_fused(self.f0, models, cand_x,
@@ -511,7 +522,7 @@ class ExplorationLoop:
         boundaries = [b for b in (cfg.N1 - cfg.d1, cfg.N1 - cfg.d1 + cfg.k,
                                   total) if b > st.done]
         q_eff = max(1, min(cfg.q, min(boundaries) - st.done))
-        cand_x, cand_d = _valid_candidates(st.rng, cfg.n_candidates)
+        cand_x, cand_d = self._candidates(cfg.n_candidates)
         if use_m0 and len(st.X0) >= 2:
             models = _fit_models(np.array(st.X0), np.array(st.Y0))
             ev = obj_space(st.Y0)
@@ -540,7 +551,7 @@ class ExplorationLoop:
         models, fant_rows = self._fantasize_inflight(models)
         ev = obj_space(st.Y0)
         ev = np.concatenate([ev, fant_rows], 0) if len(fant_rows) else ev
-        cand_x, cand_d = _valid_candidates(st.rng, cfg.n_candidates)
+        cand_x, cand_d = self._candidates(cfg.n_candidates)
         js = _acquire_batch(models, cand_x, ev, self.ref, q=q_eff)
         self._dispatch(cand_x[js], [cand_d[j] for j in js], "f0")
         st.done += len(js)

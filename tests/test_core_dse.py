@@ -273,7 +273,11 @@ def test_feasible_strategy_arrays_match_scalar_enumeration():
     d = _design()
     for wl in (GPT_BENCHMARKS[0], GPT_BENCHMARKS[2]):
         for nw in (1, 4):
-            ref = sorted(enumerate_strategies(d, wl, n_wafers=nw),
+            # memory_model="grid": feasible_strategy_arrays bakes the frozen
+            # legacy memory check (the grid-mode replay contract); the v2
+            # recompute-aware default is exercised by tests/test_joint_dse.py
+            ref = sorted(enumerate_strategies(d, wl, n_wafers=nw,
+                                              memory_model="grid"),
                          key=strategy_sort_key)[:24]
             total = d.total_cores() * nw
             budget = (d.buffer_kb * 1024.0 * total

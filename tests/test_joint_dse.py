@@ -1,0 +1,255 @@
+"""Strategy-architecture co-exploration (ISSUE 9, DESIGN.md §13): the
+joint (architecture, Strategy) search dimension end to end — pinned
+evaluation replays the grid argmin bit-exactly, derived caps unlock
+pp > 64 on deep models, the v2 memory model is recompute/schedule-aware,
+joint campaigns run + resume bit-identically, and exported train configs
+pass the `repro.dist` shardability gate and the real launcher."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.compiler import (Strategy, derived_strategy_caps,
+                                 enumerate_strategies, strategy_memory_need)
+from repro.core.design_space import (JointDesign, StrategySpace, WSCDesign,
+                                     decode, sample)
+from repro.core.evaluator import (clear_eval_cache, evaluate_design_batch,
+                                  evaluate_joint_batch)
+from repro.core.validator import validate, validate_joint_batch
+from repro.core.workload import GPT_BENCHMARKS
+from repro.explore import Campaign, CampaignSpec, FidelitySchedule
+from repro.explore.export import (export_train_config, load_train_config,
+                                  train_argv, validate_train_config)
+
+WL = GPT_BENCHMARKS[0]                                   # GPT-1.7B train
+
+
+def _designs(n=32, seed=11):
+    rng = np.random.default_rng(seed)
+    return [r.design for r in (validate(decode(u)) for u in sample(rng, n))
+            if r.ok]
+
+
+def joint_spec(**over) -> CampaignSpec:
+    kw = dict(
+        name="t-joint", workload="GPT-1.7B", scenario="train",
+        strategy="mfmobo", strategy_mode="joint",
+        fidelity=FidelitySchedule(f1="analytical", f0="analytical",
+                                  d1=2, d0=2, k=2),
+        n_evals_f0=5, n_evals_f1=6, q=2, n_candidates=16,
+        max_strategies=6, seed=7)
+    kw.update(over)
+    return CampaignSpec(**kw)
+
+
+# ------------------- pinned evaluation vs the strategy grid -----------------
+
+
+def test_joint_pinned_replays_grid_argmin_bit_exact():
+    """Pinning each design to its own grid-argmin strategy through the
+    joint path must reproduce the grid-mode objectives bit-for-bit — the
+    contract that makes joint and grid hypervolumes comparable."""
+    designs = _designs()
+    assert len(designs) >= 8
+    clear_eval_cache()
+    grid = evaluate_design_batch(designs, WL, max_strategies=8)
+    pts = [JointDesign(d, r.strategy)
+           for d, r in zip(designs, grid) if r.feasible]
+    assert pts, "expected feasible grid evaluations"
+    joint = evaluate_joint_batch(pts, WL, max_strategies=8)
+    for g, j in zip([r for r in grid if r.feasible], joint):
+        assert j.feasible
+        assert j.throughput == g.throughput          # bitwise, not approx
+        assert j.power_w == g.power_w
+        assert j.strategy == g.strategy
+        assert j.n_wafers == g.n_wafers
+
+
+def test_joint_batch_is_cached():
+    designs = _designs(n=16)[:4]
+    strat = Strategy(tp=2, pp=2, dp=2, microbatches=2)
+    pts = [JointDesign(d, strat) for d in designs]
+    clear_eval_cache()
+    a = evaluate_joint_batch(pts, WL, max_strategies=8)
+    b = evaluate_joint_batch(pts, WL, max_strategies=8)
+    assert [(r.throughput, r.feasible) for r in a] == \
+        [(r.throughput, r.feasible) for r in b]
+    # a different pinned strategy must not collide in the cache
+    pts2 = [JointDesign(d, Strategy(tp=4, pp=1, dp=2, microbatches=2))
+            for d in designs]
+    c = evaluate_joint_batch(pts2, WL, max_strategies=8)
+    assert any(x.throughput != y.throughput
+               for x, y in zip(a, c) if x.feasible and y.feasible) or \
+        all(x.strategy != y.strategy for x, y in zip(a, c))
+
+
+# ------------------- derived caps: pp > 64 on deep models -------------------
+
+
+def test_deep_workload_can_use_pp_over_64():
+    """The historical pp <= 64 magic cap is gone: a 128-layer model admits
+    pp = 128 both in the derived caps and in actual enumeration."""
+    wl128 = dataclasses.replace(WL, n_layers=128)
+    caps = derived_strategy_caps(wl128, 1 << 19)
+    assert caps["pp"] == 128 > 64
+    d = validate(WSCDesign()).design
+    ss = enumerate_strategies(d, wl128)
+    assert any(s.pp == 128 for s in ss)
+    # the joint encoding reaches it too: encode/decode round-trips pp=128
+    space = StrategySpace.for_workload(wl128, 1 << 19)
+    s = Strategy(tp=2, pp=128, dp=2, microbatches=2)
+    assert space.decode_strategy(space.encode_strategy(s)).pp == 128
+    ok = validate_joint_batch([JointDesign(d, s)], wl128)[0]
+    assert ok.reason != "strategy_pp"
+
+
+def test_caps_scale_with_cores_and_layers():
+    caps_small = derived_strategy_caps(WL, 256)
+    assert caps_small["tp"] == 256 and caps_small["pp"] == 16  # 24 layers
+    assert caps_small["ep"] == 1                               # dense
+    moe = dataclasses.replace(WL, moe_experts=8)
+    assert derived_strategy_caps(moe, 256)["ep"] == 8
+
+
+# ------------------- v2 memory model regression -----------------------------
+
+
+def test_memory_model_counts_activations_and_optimizer():
+    """Regression for the PR 2 memory check: the optimizer multiplier and
+    the activation term are both present — the frozen grid formula
+    (weights-only) strictly underestimates a training footprint."""
+    p = WL.params_bytes()
+    need = float(strategy_memory_need(WL, tp=1, pp=1, dp=1, mb=1))
+    assert need > 6.0 * p                 # weights*opt_mult plus activations
+    frozen = 1 * p * 6.0 / 1              # the legacy grid-mode check
+    assert need > frozen
+
+
+def test_memory_model_recompute_and_schedule():
+    # recompute keeps only the stage-boundary activation per resident layer
+    full = float(strategy_memory_need(WL, 1, 2, 1, 8, recompute=False))
+    rc = float(strategy_memory_need(WL, 1, 2, 1, 8, recompute=True))
+    assert rc < full
+    # GPipe keeps all mb microbatches in flight; 1F1B at most pp
+    f1b = float(strategy_memory_need(WL, 1, 2, 1, 8, gpipe=False))
+    gp = float(strategy_memory_need(WL, 1, 2, 1, 8, gpipe=True))
+    assert gp > f1b
+    # expert parallelism shards MoE expert weights
+    moe = dataclasses.replace(WL, moe_experts=8)
+    if moe.expert_params_bytes() > 0:
+        assert float(strategy_memory_need(moe, 1, 1, 1, 1, ep=8)) < \
+            float(strategy_memory_need(moe, 1, 1, 1, 1, ep=1))
+
+
+# ------------------- joint validation verdicts ------------------------------
+
+
+def test_validate_joint_batch_verdicts():
+    d = validate(WSCDesign()).design
+    wl_tiny = dataclasses.replace(WL, seq=1)     # tokens_per_step == batch
+    pts = [
+        JointDesign(d, Strategy(tp=2, pp=2, dp=2, microbatches=2)),    # ok
+        JointDesign(d, Strategy(tp=1, pp=32, dp=1, microbatches=1)),   # pp>L
+        JointDesign(d, Strategy(tp=1, pp=1, dp=1, microbatches=1,
+                                ep=2)),          # dense model, ep > 1
+        JointDesign(d, Strategy(tp=1, pp=1, dp=512,
+                                microbatches=32)),  # over-splits the step
+    ]
+    out = validate_joint_batch(pts, wl_tiny)
+    assert out[0].ok
+    assert (not out[1].ok) and out[1].reason == "strategy_pp"
+    assert (not out[2].ok) and out[2].reason == "strategy_ep_experts"
+    assert (not out[3].ok) and out[3].reason == "strategy_tokens"
+
+
+# ------------------- joint campaigns: run / resume / spec -------------------
+
+
+def test_joint_spec_json_roundtrip_and_grid_dict_unchanged():
+    spec = joint_spec()
+    again = CampaignSpec.from_json(spec.to_json())
+    assert again == spec and again.strategy_mode == "joint"
+    # grid-mode specs serialize without the new keys, so pre-joint JSON
+    # artifacts stay byte-identical
+    grid = joint_spec(strategy_mode="grid")
+    d = grid.to_dict()
+    assert "strategy_mode" not in d and "strategy_space" not in d
+    with pytest.raises(ValueError, match="strategy_mode"):
+        joint_spec(strategy_mode="best").validate()
+    with pytest.raises(ValueError):
+        joint_spec(scenario="serving").validate()
+
+
+def test_joint_campaign_runs_and_front_carries_strategies():
+    clear_eval_cache()
+    res = Campaign(joint_spec()).run()
+    assert res.finished
+    spec = joint_spec()
+    assert res.n_evals == spec.n_evals_f0 + spec.n_evals_f1
+    assert res.hv_final > 0
+    # every evaluated point is a JointDesign and the front records the
+    # pinned strategy in its describe string
+    assert all(isinstance(p, JointDesign) for p in res.trace.designs)
+    assert all("tp=" in p["describe"] and "pp=" in p["describe"]
+               for p in res.front)
+
+
+def test_joint_checkpoint_resume_bit_identical(tmp_path):
+    ck = str(tmp_path / "joint.ckpt.pkl")
+    clear_eval_cache()
+    full = Campaign(joint_spec()).run()
+    clear_eval_cache()
+    partial = Campaign(joint_spec()).run(checkpoint_path=ck, max_steps=2)
+    assert not partial.finished
+    resumed = Campaign.resume(ck).run(checkpoint_path=ck)
+    assert resumed.finished
+    assert [tuple(y) for y in resumed.trace.ys] == \
+        [tuple(y) for y in full.trace.ys]
+    assert resumed.trace.hv == full.trace.hv
+    assert resumed.trace.designs == full.trace.designs
+
+
+# ------------------- export: DSE winner -> runnable train config ------------
+
+
+def test_export_validates_every_shipped_arch():
+    s = Strategy(tp=2, pp=1, dp=2, microbatches=1)
+    from repro.configs import ARCH_IDS
+    for arch in sorted(ARCH_IDS):
+        cfg = export_train_config(s, arch, batch=8, seq=64, reduced=True)
+        ok, why = validate_train_config(cfg)
+        assert ok, f"{arch}: {why}"
+
+
+def test_export_rejects_bad_arithmetic_and_arch():
+    s = Strategy(tp=1, pp=1, dp=3, microbatches=1)
+    cfg = export_train_config(s, "smollm-135m", batch=8, seq=32)
+    assert validate_train_config(cfg) == (False, "dp_batch_divide")
+    cfg = export_train_config(
+        Strategy(tp=1, pp=1, dp=2, microbatches=3), "smollm-135m",
+        batch=8, seq=32)
+    assert validate_train_config(cfg) == (False, "microbatch_divide")
+    with pytest.raises(ValueError, match="unknown arch"):
+        export_train_config(s, "gpt-nonesuch")
+
+
+def test_export_roundtrip_and_launcher_dryrun(tmp_path):
+    """An exported config must be accepted by the real production
+    launcher: `train.main(train_argv(cfg))` runs the reduced arch on a
+    1-device mesh to completion."""
+    from repro.launch import train as launch_train
+
+    d = validate(WSCDesign()).design
+    point = JointDesign(d, Strategy(tp=1, pp=1, dp=1, microbatches=1))
+    path = str(tmp_path / "export.json")
+    cfg = export_train_config(point, "smollm-135m", steps=2, batch=2,
+                              seq=32, reduced=True, path=path)
+    loaded = load_train_config(path)
+    assert loaded == cfg
+    ok, why = validate_train_config(loaded)
+    assert ok, why
+    out = launch_train.main(train_argv(loaded)
+                            + ["--ckpt-dir", str(tmp_path / "ck"),
+                               "--log-every", "100"])
+    assert [m["step"] for m in out["metrics"]] == [0, 1]
+    assert np.isfinite([m["loss"] for m in out["metrics"]]).all()
