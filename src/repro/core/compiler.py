@@ -331,6 +331,53 @@ def strategy_memory_need(wl: LLMWorkload, tp, pp, dp, mb,
     return need
 
 
+def pinned_resource_ok(wl: LLMWorkload, geom, n_wafers, tp, pp, dp, mb
+                       ) -> np.ndarray:
+    """Resource-fit mask for pinned (joint-mode) strategies: the exact
+    feasibility arithmetic the grid path applies at enumeration
+    (`feasible_strategy_arrays` / the compiled grid body) — core count
+    (chunks x tp must fit the system) and the frozen legacy memory check —
+    evaluated for one pinned strategy per design. Using the grid's own
+    formulas (not the v2 model) keeps the replay contract intact: a
+    strategy the grid argmin crowned can never be rejected here, while a
+    physically impossible pinned point (cores or memory) can no longer be
+    scored feasible. The recompute/schedule-aware v2 model gates the
+    *search* side (`validator.validate_joint_batch`).
+
+    One deliberate asymmetry: when *nothing* in the enumeration grid fits a
+    system, `feasible_strategy_arrays` falls back to Strategy(1,1,1,1) and
+    grid mode evaluates it anyway — so a pinned (1,1,1,1) is accepted
+    exactly when that fallback would have fired, and only then.
+
+    `geom` is a DesignBatch (duck-typed: buffer_kb / total_cores /
+    dram_gb_per_reticle / n_reticles arrays); tp/pp/dp/mb are (N,) int
+    arrays. Shared by the NumPy (`fidelity._finish`) and compiled
+    (`eval_compiled`) pinned paths, so the two gates agree bitwise."""
+    nw = np.asarray(n_wafers, np.int64)
+    tp = np.asarray(tp, np.int64)
+    pp = np.asarray(pp, np.int64)
+    dp = np.asarray(dp, np.int64)
+    mb = np.asarray(mb, np.int64)
+    tc = np.asarray(geom.total_cores, np.int64) * nw
+    sram_total = geom.buffer_kb * 1024.0 * geom.total_cores * nw
+    dram_total = geom.dram_gb_per_reticle * 1e9 * geom.n_reticles * nw
+    budget = sram_total + dram_total
+    p_bytes = wl.params_bytes()
+    if wl.phase == "train":
+        need = dp * p_bytes * 6.0 / np.maximum(pp, 1)
+    else:
+        need = (dp * p_bytes / np.maximum(pp, 1)
+                + wl.kv_bytes_per_layer() * wl.n_layers)
+    fits = (pp * dp * tp <= tc) & (tp <= tc) & (need <= budget)
+    g = _strategy_grid(wl)
+    grid_has_fit = ((g["chunks"][None, :] * g["tp"][None, :]
+                     <= tc[:, None])
+                    & (g["tp"][None, :] <= tc[:, None])
+                    & (g["need"][None, :] <= budget[:, None])).any(axis=1)
+    is_fallback = (tp == 1) & (pp == 1) & (dp == 1) & (mb == 1)
+    return fits | (is_fallback & ~grid_has_fit)
+
+
 def derived_strategy_caps(wl: LLMWorkload, total_cores: int
                           ) -> Dict[str, int]:
     """Largest power-of-two value of each strategy axis the design/workload

@@ -759,19 +759,24 @@ class _EvalProgram:
         return _PendingPinnedEval(self, out)
 
     def results_from_pinned(self, out: Dict[str, np.ndarray],
-                            nw: np.ndarray, strategies
+                            nw: np.ndarray, strategies,
+                            res_ok: Optional[np.ndarray] = None
                             ) -> List["EvalResult"]:
         """Materialize pinned-mode EvalResults — the same construction the
-        NumPy `_finish` does in pinned mode (strategy_infeasible on a
-        failed point, breakdown gains "ep" only when the all-to-all term
-        is nonzero, matching `step_result_at`)."""
+        NumPy `_finish` does in pinned mode (strategy_resources when the
+        host-computed grid resource-fit mask `res_ok` rejects the point,
+        strategy_infeasible on a power/finiteness failure, breakdown gains
+        "ep" only when the all-to-all term is nonzero, matching
+        `step_result_at`)."""
         from repro.core.fidelity import EvalResult
         res: List[EvalResult] = []
         for i, s in enumerate(strategies):
-            if not bool(out["feasible"][i]):
+            fit = res_ok is None or bool(res_ok[i])
+            if not (fit and bool(out["feasible"][i])):
                 res.append(EvalResult(0.0, float("inf"), s, None,
                                       int(nw[i]), False,
-                                      "strategy_infeasible"))
+                                      "strategy_resources" if not fit
+                                      else "strategy_infeasible"))
                 continue
             eff = float(out["pipeline_eff"][i])
             mbc = float(out["mb_count"][i])
@@ -824,11 +829,12 @@ class _PendingPinnedEval:
     prog: _EvalProgram
     out: Dict
 
-    def finish(self, nw_picks: np.ndarray, strategies, q: int
-               ) -> List["EvalResult"]:
+    def finish(self, nw_picks: np.ndarray, strategies, q: int,
+               res_ok: Optional[np.ndarray] = None) -> List["EvalResult"]:
         host = {k: np.asarray(v)[:q] for k, v in self.out.items()}
-        return self.prog.results_from_pinned(host, nw_picks[:q],
-                                             strategies[:q])
+        return self.prog.results_from_pinned(
+            host, nw_picks[:q], strategies[:q],
+            res_ok if res_ok is None else res_ok[:q])
 
 
 # ---------------------------------------------------------------------------
@@ -868,12 +874,18 @@ def evaluate_pinned_compiled(geom: DesignBatch, wl: LLMWorkload,
                              max_strategies: int = 24) -> List["EvalResult"]:
     """Compiled joint-mode `evaluate_batch`: each design is evaluated under
     its pinned Strategy (no grid argmin), bit-identical to the NumPy pinned
-    reference path in `AnalyticalBackend.evaluate_batch_ref`."""
+    reference path in `AnalyticalBackend.evaluate_batch_ref` — including
+    the host-side grid resource-fit gate (`compiler.pinned_resource_ok`),
+    computed by the same NumPy code both paths share."""
+    from repro.core.compiler import pinned_resource_ok
+
     prog = _program_for(wl, max_strategies)
     nw = np.asarray(n_wafers, np.int64)
-    out = prog.run_batch_pinned(geom_arrays(geom), nw,
-                                strategy_arrays(strategies))
-    return prog.results_from_pinned(out, nw, strategies)
+    cols = strategy_arrays(strategies)
+    out = prog.run_batch_pinned(geom_arrays(geom), nw, cols)
+    res_ok = pinned_resource_ok(wl, geom, nw, cols[0], cols[1], cols[2],
+                                cols[3])
+    return prog.results_from_pinned(out, nw, strategies, res_ok)
 
 
 def dispatch_fused_eval_pinned(pool_geom: DesignBatch, wl: LLMWorkload,

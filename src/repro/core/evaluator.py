@@ -45,6 +45,8 @@ from repro.core.compiler import (
     enumerate_strategies,
     strategy_sort_key,
 )
+from repro.core.compiler import pinned_resource_ok as \
+    compiler_pinned_resource_ok
 from repro.core.design_space import DesignBatch, WSCDesign
 from repro.core.fidelity import (
     EvalResult,
@@ -424,8 +426,13 @@ def evaluate_pool_fused_joint(pool_points, wl: LLMWorkload,
         geom, wl, nw, strategies, js_dev, max_strategies=max_strategies)
     js_all = np.asarray(js_dev)
     js = [int(j) for j in js_all[:q_eff]]
+    # grid resource-fit gate over the pool, gathered to the pick order —
+    # the same host-computed mask the batch pinned path applies
+    cols = eval_compiled.strategy_arrays(strategies)
+    res_ok = compiler_pinned_resource_ok(wl, geom, nw, cols[0], cols[1],
+                                         cols[2], cols[3])[js_all]
     fresh = pending.finish(nw[js_all], [strategies[j] for j in js_all],
-                           q_eff)
+                           q_eff, res_ok=res_ok)
     keys = [_cache_key(designs[j], wl, "analytical", int(nw[j]),
                        max_strategies, gnn_params,
                        strategy=strategies[j]) for j in js]

@@ -37,6 +37,7 @@ from repro.core.compiler import (
     Strategy,
     feasible_strategy_arrays,
     grid_for_batch,
+    pinned_resource_ok,
     row_allgather_pattern,
 )
 from repro.core.design_space import DesignBatch, WSCDesign
@@ -231,17 +232,23 @@ def _finish(ax: CandidateAxis, wl: LLMWorkload, lat: np.ndarray
     wins, matching the scalar search order — candidates are already
     strategy-sorted). In pinned mode (ax.pinned) there is exactly one
     candidate per design and no argmin: the EvalResult carries the original
-    searched Strategy, infeasible points report "strategy_infeasible"."""
+    searched Strategy. A pinned strategy that fails the grid resource-fit
+    arithmetic (cores / memory capacity, `compiler.pinned_resource_ok`)
+    reports "strategy_resources"; one that fails the step model's
+    power/finiteness check reports "strategy_infeasible"."""
     step = evaluate_step_batch(ax.cg, wl, ax.tp, ax.pp, ax.dp, ax.mb, lat,
                                ax.sram_bits_layer, ax.noc_bytes_layer,
                                ax.nw_c, ep=ax.ep, recompute=ax.rc)
     results: List[EvalResult] = []
     if ax.pinned is not None:
+        res_ok = pinned_resource_ok(wl, ax.geom, ax.nw, ax.tp, ax.pp, ax.dp,
+                                    ax.mb)
         for i, s in enumerate(ax.pinned):
-            if not step["feasible"][i]:
-                results.append(EvalResult(0.0, float("inf"), s, None,
-                                          int(ax.nw[i]), False,
-                                          "strategy_infeasible"))
+            if not (res_ok[i] and step["feasible"][i]):
+                results.append(EvalResult(
+                    0.0, float("inf"), s, None, int(ax.nw[i]), False,
+                    "strategy_resources" if not res_ok[i]
+                    else "strategy_infeasible"))
                 continue
             sr = step_result_at(step, i)
             results.append(EvalResult(sr.throughput, sr.power_w, s, sr,

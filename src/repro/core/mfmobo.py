@@ -118,26 +118,42 @@ def _grid_seed_strategies(designs, wl, space):
     """Heuristic strategy seeds for joint sampling: each design's
     first-feasible row of the sorted strategy grid (what grid-mode
     evaluation would try first), as (N, 7) encoded strategy columns plus a
-    found-mask. Vectorized over the cached `_strategy_grid`; nw=1 — a seed,
-    not a resource decision."""
-    from repro.core.compiler import Strategy, _strategy_grid
+    found-mask. Vectorized over the cached `_strategy_grid`, at the same
+    area-matched system size the validator gates on (`wafers_for_budget`
+    per design). Each seed is then re-checked under the v2 memory model
+    (`strategy_memory_need`); a training seed that only fits with
+    activation recompute carries recompute=True into the search — the
+    validator would reject the plain row with "strategy_memory", so the
+    fallback keeps the seed alive and hands q-EHVI a live recompute
+    signal."""
+    from repro.core.compiler import (Strategy, _strategy_grid,
+                                     strategy_memory_need)
     from repro.core.design_space import DesignBatch
+    from repro.core.evaluator import wafers_for_budget
 
     g = _strategy_grid(wl)
     db = DesignBatch.from_designs(list(designs))
-    tc = db.total_cores.astype(np.float64)
+    nw = np.array([wafers_for_budget(d, wl) for d in designs], np.float64)
+    tc = db.total_cores.astype(np.float64) * nw
     mem = (db.buffer_kb * 1024.0 * db.total_cores
-           + db.dram_gb_per_reticle * 1e9 * db.n_reticles)
+           + db.dram_gb_per_reticle * 1e9 * db.n_reticles) * nw
     o = g["order"]
     m = ((g["chunks"][None, o] * g["tp"][None, o] <= tc[:, None])
          & (g["tp"][None, o] <= tc[:, None])
          & (g["need"][None, o] <= mem[:, None]))
     found = m.any(axis=1)
     idx = o[np.argmax(m, axis=1)]
+    need_plain = strategy_memory_need(wl, g["tp"][idx], g["pp"][idx],
+                                      g["dp"][idx], g["mb"][idx])
+    need_rc = strategy_memory_need(wl, g["tp"][idx], g["pp"][idx],
+                                   g["dp"][idx], g["mb"][idx],
+                                   recompute=True)
+    rc = ((wl.phase == "train") & (need_plain > mem) & (need_rc <= mem))
     enc = np.zeros((len(designs), space.n_dims))
     for i in np.flatnonzero(found):
         s = Strategy(int(g["tp"][idx[i]]), int(g["pp"][idx[i]]),
-                     int(g["dp"][idx[i]]), int(g["mb"][idx[i]]))
+                     int(g["dp"][idx[i]]), int(g["mb"][idx[i]]),
+                     recompute=bool(rc[i]))
         enc[i] = space.encode_strategy(s)
     return enc, found
 

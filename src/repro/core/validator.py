@@ -165,27 +165,43 @@ def validate_batch(designs: Sequence[WSCDesign],
 
 
 def validate_joint_batch(points, wl, peak_power_w: float = C.WAFER_POWER_W,
-                         use_oracle: bool = True) -> List[ValidationResult]:
+                         use_oracle: bool = True,
+                         n_wafers=None) -> List[ValidationResult]:
     """Vectorized validation of N `JointDesign` points: the architecture
     half goes through `validate_batch` unchanged (same constraint order and
     reasons), then surviving points get their pinned Strategy checked —
-    static legality first (vectorized), then the `repro.dist` shardability
-    oracle (`param_specs`/`batch_specs` instantiable on a (dp, tp) mesh;
-    memoized per unique (tp, dp, ep), so N points cost a handful of
-    spec-tree builds). Strategy failure reasons:
+    static legality and resource fit first (vectorized), then the
+    `repro.dist` shardability oracle (`param_specs`/`batch_specs`
+    instantiable on a (dp, tp) mesh; memoized per unique (tp, dp, ep), so
+    N points cost a handful of spec-tree builds). Strategy failure
+    reasons, in precedence order:
 
         "strategy_pp"           pp exceeds the workload's layer count
         "strategy_tokens"       dp x microbatches over-splits the step
+        "strategy_batch_div"    dp x microbatches does not divide the
+                                global batch (grid-mode enumeration's
+                                divisibility constraint)
+        "strategy_cores"        tp x pp x dp exceeds the system's cores
+                                (area-matched wafer count, or `n_wafers`)
+        "strategy_memory"       the recompute/schedule/ep-aware v2 memory
+                                footprint (`compiler.strategy_memory_need`)
+                                exceeds the system's SRAM+DRAM capacity —
+                                this is where recompute (saves activation
+                                memory at 4x backward cost) and the GPipe
+                                schedule (keeps all microbatches in
+                                flight) become live search trade-offs
         "strategy_ep"/"strategy_unshardable"/...  oracle verdicts,
             prefixed "strategy_" (ep_experts, dp_batch, tp_dead)
 
-    Resource fit (cores, memory capacity) is the evaluator's job — the
-    step model decides it per system size; the validator is static
-    legality only."""
+    `n_wafers` overrides the per-design system size; by default each
+    design gets the same area-matched wafer count evaluation will use
+    (`evaluator.wafers_for_budget` on the spares-resolved design)."""
     points = list(points)
     if not points:
         return []
     import numpy as _np
+
+    from repro.core.compiler import strategy_memory_need
 
     arch = validate_batch([p.design for p in points],
                           peak_power_w=peak_power_w)
@@ -194,12 +210,42 @@ def validate_joint_batch(points, wl, peak_power_w: float = C.WAFER_POWER_W,
     pp = _np.array([p.strategy.pp for p in points], _np.int64)
     dp = _np.array([p.strategy.dp for p in points], _np.int64)
     mb = _np.array([p.strategy.microbatches for p in points], _np.int64)
+    ep = _np.array([p.strategy.ep for p in points], _np.int64)
+    rc = _np.array([p.strategy.recompute for p in points], bool)
+    gp = _np.array([p.strategy.schedule == "gpipe" for p in points], bool)
     mb_count = mb if wl.phase == "train" else _np.ones_like(mb)
+
+    # system size and capacity: the spares-resolved design where arch
+    # validation succeeded (matching what evaluation will score), the raw
+    # design otherwise (value unused — the arch reason wins below)
+    resolved = [ar.design if ar.ok else p.design
+                for p, ar in zip(points, arch)]
+    if n_wafers is None:
+        from repro.core.evaluator import wafers_for_budget
+        nw = _np.array([wafers_for_budget(d, wl) for d in resolved],
+                       _np.int64)
+    else:
+        nw = _np.broadcast_to(_np.asarray(n_wafers, _np.int64),
+                              (len(points),))
+    total_cores = _np.array([d.total_cores() for d in resolved],
+                            _np.int64) * nw
+    mem_budget = _np.array(
+        [d.buffer_kb * 1024.0 * d.total_cores()
+         + d.dram_gb_per_reticle() * 1e9 * d.n_reticles()
+         for d in resolved]) * nw
+    need = strategy_memory_need(wl, tp, pp, dp, mb, ep=ep, recompute=rc,
+                                gpipe=gp)
 
     reason = _np.full(len(points), "", object)
     reason[(reason == "") & (pp > wl.n_layers)] = "strategy_pp"
     reason[(reason == "") & (dp * mb_count > wl.tokens_per_step())] = \
         "strategy_tokens"
+    reason[(reason == "") & (wl.batch % (dp * mb_count) != 0)] = \
+        "strategy_batch_div"
+    reason[(reason == "")
+           & ((pp * dp * tp > total_cores) | (tp > total_cores))] = \
+        "strategy_cores"
+    reason[(reason == "") & (need > mem_budget)] = "strategy_memory"
 
     out: List[ValidationResult] = []
     for i, (p, ar) in enumerate(zip(points, arch)):

@@ -162,6 +162,60 @@ def test_validate_joint_batch_verdicts():
     assert (not out[3].ok) and out[3].reason == "strategy_tokens"
 
 
+def test_validate_joint_batch_resource_verdicts():
+    """The search-side resource gate: joint validation rejects strategies
+    that can never fit the area-matched system — more cells than cores,
+    footprints over SRAM+DRAM capacity, or a dp x mb split that doesn't
+    divide the global batch (the grid's own divisibility constraint)."""
+    d = validate(WSCDesign()).design
+    pts = [
+        JointDesign(d, Strategy(tp=1 << 18, pp=1, dp=1, microbatches=1)),
+        JointDesign(d, Strategy(tp=1, pp=1, dp=512, microbatches=1)),
+        JointDesign(d, Strategy(tp=1, pp=1, dp=1, microbatches=3)),
+    ]
+    out = validate_joint_batch(pts, WL)
+    assert (not out[0].ok) and out[0].reason == "strategy_cores"
+    assert (not out[1].ok) and out[1].reason == "strategy_memory"
+    assert (not out[2].ok) and out[2].reason == "strategy_batch_div"
+
+
+def test_validate_joint_batch_schedule_recompute_are_live():
+    """schedule/recompute change verdicts, not just the score: at a
+    sequence length where activations dominate, GPipe (all microbatches in
+    flight) blows the memory budget that 1F1B (at most pp in flight) fits,
+    and recompute buys the GPipe point back — both axes present real
+    feasibility trade-offs to the joint search."""
+    d = validate(WSCDesign()).design
+    wl_long = dataclasses.replace(WL, seq=1 << 16)
+    pts = [
+        JointDesign(d, Strategy(1, 2, 1, 8)),
+        JointDesign(d, Strategy(1, 2, 1, 8, schedule="gpipe")),
+        JointDesign(d, Strategy(1, 2, 1, 8, schedule="gpipe",
+                                recompute=True)),
+    ]
+    out = validate_joint_batch(pts, wl_long, n_wafers=1)
+    assert out[0].ok                                      # 1F1B fits
+    assert (not out[1].ok) and out[1].reason == "strategy_memory"
+    assert out[2].ok                                      # recompute unlocks
+
+
+@pytest.mark.parametrize("compiled", ["1", "0"])
+def test_joint_eval_rejects_impossible_pinned(monkeypatch, compiled):
+    """The evaluation-side resource gate: a pinned strategy the grid's own
+    enumeration arithmetic would never admit (cores or the frozen memory
+    check) comes back infeasible with reason "strategy_resources" — on the
+    compiled and the NumPy reference pipelines alike."""
+    monkeypatch.setenv("REPRO_COMPILED_EVAL", compiled)
+    d = validate(WSCDesign()).design
+    pts = [JointDesign(d, Strategy(tp=1 << 18, pp=1, dp=1, microbatches=1)),
+           JointDesign(d, Strategy(tp=1, pp=1, dp=512, microbatches=1))]
+    clear_eval_cache()
+    out = evaluate_joint_batch(pts, WL, max_strategies=8)
+    assert all(not r.feasible for r in out)
+    assert all(r.reason == "strategy_resources" for r in out)
+    assert all(r.throughput == 0.0 for r in out)
+
+
 # ------------------- joint campaigns: run / resume / spec -------------------
 
 
