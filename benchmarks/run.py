@@ -17,8 +17,8 @@ import sys
 import time
 import traceback
 
-BENCHES = ("fig7", "fig8", "fig9", "fig10", "fig11", "fig11b", "fig12",
-           "fig13", "roofline")
+BENCHES = ("fig7", "fig8", "fig9", "fig10", "fig11", "fig11b", "fig11c",
+           "fig12", "fig13", "roofline")
 
 _MODULES = {
     "fig7": "benchmarks.fig7_eval_models",
@@ -27,6 +27,7 @@ _MODULES = {
     "fig10": "benchmarks.fig10_reticle_granularity",
     "fig11": "benchmarks.fig11_inference",
     "fig11b": "benchmarks.fig11b_serving",
+    "fig11c": "benchmarks.fig11c_trace_serving",
     "fig12": "benchmarks.fig12_heterogeneity",
     "fig13": "benchmarks.fig13_dse",
     "roofline": "benchmarks.roofline_table",
@@ -42,7 +43,7 @@ _TRACKED_KEYS = ("candidates_per_sec", "n_evaluations", "wall_s", "q",
                  "n_points", "workload", "eval_cache",
                  "serving_front", "goodput_best", "slo", "explorer",
                  "hetero_serving", "campaigns", "stage_cache", "fleet",
-                 "eval_lanes")
+                 "eval_lanes", "trace_serving", "chat_slo")
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_dse.json")
@@ -413,6 +414,21 @@ def main():
             print("warm-fleet f0 cache hit-rate below the 50% floor "
                   f"({100 * fleet['warm_f0_hit_rate']:.0f}%)")
             failures.append("fleet_warm_cache_hit_rate_floor")
+
+    # trace-serving acceptance floors (DESIGN.md §14): the spike trace must
+    # produce positive worst-window interactive goodput somewhere, and some
+    # non-FIFO policy must beat FIFO at equal power (same design)
+    tsv = (records.get("fig11c", {}).get("metrics", {}) or {}) \
+        .get("trace_serving")
+    if tsv:
+        if tsv["worst_window_goodput_best"] <= 0.0:
+            print("trace-serving worst-window goodput floor violated "
+                  "(no design/policy sustains chat goodput through the spike)")
+            failures.append("trace_serving_goodput_floor")
+        if not tsv["policy_beats_fifo"]:
+            print("no non-FIFO policy beats FIFO on worst-window goodput "
+                  "at equal power")
+            failures.append("trace_serving_policy_vs_fifo_floor")
 
     path = write_bench_json(records, args.quick, speedup, optimizer, fused,
                             jvg)

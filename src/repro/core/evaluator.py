@@ -486,6 +486,17 @@ def evaluate_serving_batch(designs: Sequence[WSCDesign],
     return serving.evaluate_serving_batch(designs, wl_base, mix, slo, **kw)
 
 
+def evaluate_trace_serving_batch(designs, wl_base: LLMWorkload, trace,
+                                 **kw):
+    """Trace-driven multi-tenant serving metrics (per-tenant SLO goodput,
+    worst-window goodput, admission/routing policies) for N designs — the
+    timed-arrival counterpart of `evaluate_serving_batch`. Thin forwarder
+    to `repro.core.traces` (lazy import, same layering as serving)."""
+    from repro.core import traces
+    return traces.evaluate_trace_serving_batch(designs, wl_base, trace,
+                                               **kw)
+
+
 def serving_objectives(wl_base: LLMWorkload, mix, slo, **kw):
     """Batch-aware (SLO goodput, power) explorer objective — forwarder to
     `repro.core.serving.serving_objectives` (lazy import, see above)."""
@@ -510,6 +521,7 @@ __all__ = [
     "evaluate_design_batch", "evaluate_joint_batch", "evaluate_objectives",
     "evaluate_objectives_batch", "evaluate_pool_fused",
     "evaluate_pool_fused_joint", "evaluate_serving_batch",
+    "evaluate_trace_serving_batch",
     "get_backend", "get_eval_cache_backend", "gnn_params_digest",
     "gnn_params_token", "registered_backends", "serving_objectives",
     "set_eval_cache_backend", "wafers_for_budget",

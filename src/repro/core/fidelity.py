@@ -538,3 +538,12 @@ def evaluate_serving_batch(designs, wl, mix, slo, **kw):
     `repro.core.serving` (lazy import: serving builds on this registry)."""
     from repro.core.serving import evaluate_serving_batch as _impl
     return _impl(designs, wl, mix, slo, **kw)
+
+
+def evaluate_trace_serving_batch(designs, wl, trace, **kw):
+    """Trace-driven, multi-tenant serving evaluation (timed arrivals,
+    per-tenant SLOs, admission/routing policies) against any registered
+    backend — the timed counterpart of `evaluate_serving_batch`. Forwarder
+    to `repro.core.traces` (lazy import: traces builds on this registry)."""
+    from repro.core.traces import evaluate_trace_serving_batch as _impl
+    return _impl(designs, wl, trace, **kw)

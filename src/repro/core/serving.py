@@ -61,7 +61,33 @@ class BatchSchedule:
 
 def continuous_batch_schedule(mix: RequestMix, slots: int) -> BatchSchedule:
     """Mirror `ServeEngine.step`/`_admit` on the request mix. The decode
-    step count is the quantity cross-validated against a real engine run."""
+    step count is the quantity cross-validated against a real engine run.
+
+    Since the trace subsystem landed this is the degenerate case of
+    `core.traces.trace_schedule` — every request arrives at step 0, one
+    tenant, FIFO admission — and delegates to it (property-tested bitwise
+    equal to the original loop, kept as `_continuous_batch_schedule_ref`,
+    so PR 4 behavior and the fig11b numbers are provably unchanged)."""
+    from repro.core.traces import RequestTrace, trace_schedule
+
+    if slots < 1:
+        raise ValueError("slots must be >= 1")
+    if mix.n_requests == 0:
+        return BatchSchedule(slots=slots, n_decode_steps=0,
+                             admit_step=np.zeros(0, np.int64),
+                             finish_step=np.zeros(0, np.int64),
+                             decode_tokens=np.zeros(0, np.int64))
+    ts = trace_schedule(RequestTrace.from_mix(mix), slots, "fifo")
+    return BatchSchedule(slots=slots, n_decode_steps=ts.n_decode_steps,
+                         admit_step=ts.admit_step,
+                         finish_step=ts.finish_step,
+                         decode_tokens=ts.decode_tokens)
+
+
+def _continuous_batch_schedule_ref(mix: RequestMix,
+                                   slots: int) -> BatchSchedule:
+    """The original PR 4 per-step loop, kept as the reference for the
+    degenerate-case bitwise property test in tests/test_traces.py."""
     if slots < 1:
         raise ValueError("slots must be >= 1")
     R = mix.n_requests

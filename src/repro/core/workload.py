@@ -197,6 +197,16 @@ class RequestMix:
         o = rng.integers(out_range[0], out_range[1] + 1, n_requests)
         return cls(tuple(int(x) for x in p), tuple(int(x) for x in o))
 
+    def as_trace(self, tenant=None):
+        """Lift this one-batch mix into the timed-arrival frame: a
+        `core.traces.RequestTrace` with every request at step 0 under a
+        single tenant — the degenerate case `trace_schedule` reduces to
+        `continuous_batch_schedule` on. Lazy import: traces layers on top
+        of this module."""
+        from repro.core.traces import DEFAULT_TENANT, RequestTrace
+        return RequestTrace.from_mix(
+            self, DEFAULT_TENANT if tenant is None else tenant)
+
 
 # ---------------------------------------------------------------------------
 # paper Table II benchmarks (Megatron-LM / GPT-3 / ZeRO-Infinity scalings)

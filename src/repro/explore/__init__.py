@@ -24,6 +24,8 @@ from repro.explore.campaign import (  # noqa: F401
     HeteroSpec,
     SCENARIOS,
     ServingSpec,
+    TRACE_POLICIES,
+    TraceSpec,
     resolve_workload,
     run_campaign,
 )
@@ -34,6 +36,7 @@ from repro.explore.objectives import (  # noqa: F401
     Objective,
     ObjectiveSpec,
     ServingObjective,
+    TraceServingObjective,
     as_objective,
 )
 from repro.explore.fleet import (  # noqa: F401

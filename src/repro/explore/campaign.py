@@ -17,6 +17,8 @@ Scenarios wire the objective adapters (repro.explore.objectives):
     inference  evaluate_design_batch on an isolated prefill/decode step
     serving    request-level continuous batching (TTFT/TPOT/SLO goodput)
     hetero     prefill/decode disaggregation under the coupled request model
+    trace_serving  trace-driven multi-tenant serving: timed arrivals, per-
+               tenant SLOs, searchable admission/routing policy (§14)
 
 Workload refs resolve against `repro.core.workload.GPT_BENCHMARKS` by name
 ("GPT-175B") or against the runtime configs as "arch_id@shape_id"
@@ -47,8 +49,11 @@ from repro.explore.objectives import (
 )
 from repro.explore.runner import ExplorationLoop, LoopConfig, STRATEGIES
 
-SCENARIOS = ("train", "inference", "serving", "hetero")
+SCENARIOS = ("train", "inference", "serving", "hetero", "trace_serving")
 HETERO_GRANULARITIES = ("core", "reticle", "wafer")
+#: trace_serving admission/routing policies a spec may pin — or "search"
+#: to make the policy a candidate dimension next to the architecture dims
+TRACE_POLICIES = ("fifo", "priority", "preempt", "disaggregated", "search")
 SPEC_VERSION = 1
 
 
@@ -114,6 +119,83 @@ class ServingSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """Trace-driven multi-tenant serving scenario (DESIGN.md §14): a seeded
+    synthetic arrival process (`kind`: poisson | spike | diurnal), the
+    tenant classes sharing the wafer, and the admission/routing policy —
+    pinned to one of `core.traces.POLICIES`, or ``"search"`` to expose the
+    policy as a candidate axis next to the 13 architecture dims
+    (`sample_policy_candidates`). Each tenant dict carries its own SLO and
+    scheduling class: ``{"name", "ttft_s", "tpot_s", "priority",
+    "interactive", "share", "prompt_range", "out_range"}``."""
+    kind: str = "spike"
+    n_requests: int = 64
+    rate: float = 0.25
+    seed: int = 0
+    slots: int = 8
+    window_steps: int = 64
+    policy: str = "fifo"
+    policies: Tuple[str, ...] = ()       # searched subset ("" = all four)
+    prefill_ratio: float = 0.5           # disaggregated stage split
+    # spike (Markov-modulated) process knobs
+    spike_factor: float = 8.0
+    spike_len: int = 32
+    gap_len: int = 128
+    # diurnal (sinusoidal-rate) process knobs
+    period: int = 512
+    amplitude: float = 0.9
+    tenants: Tuple[Dict, ...] = ()
+
+    def __post_init__(self):
+        norm = []
+        for t in self.tenants:
+            t = dict(t)
+            for k in ("prompt_range", "out_range"):
+                if k in t and t[k] is not None:
+                    t[k] = tuple(int(x) for x in t[k])
+            norm.append(t)
+        object.__setattr__(self, "tenants", tuple(norm))
+        object.__setattr__(self, "policies",
+                           tuple(str(p) for p in self.policies))
+
+    def tenant_classes(self):
+        from repro.core.traces import DEFAULT_TENANT, TenantClass
+        if not self.tenants:
+            return (DEFAULT_TENANT,)
+        return tuple(TenantClass(
+            name=t["name"], ttft_s=float(t["ttft_s"]),
+            tpot_s=float(t["tpot_s"]), priority=int(t.get("priority", 0)),
+            interactive=bool(t.get("interactive", True)))
+            for t in self.tenants)
+
+    def trace(self):
+        from repro.core.traces import synth_trace
+        kw: Dict = {"rate": self.rate}
+        if self.kind == "spike":
+            kw.update(spike_factor=self.spike_factor,
+                      spike_len=self.spike_len, gap_len=self.gap_len)
+        elif self.kind == "diurnal":
+            kw.update(period=self.period, amplitude=self.amplitude)
+        if self.tenants:
+            kw.update(
+                tenants=self.tenant_classes(),
+                shares=tuple(float(t.get("share", 1.0))
+                             for t in self.tenants),
+                prompt_ranges=tuple(t.get("prompt_range", (256, 1024))
+                                    for t in self.tenants),
+                out_ranges=tuple(t.get("out_range", (32, 128))
+                                 for t in self.tenants))
+        return synth_trace(self.kind, self.n_requests, seed=self.seed, **kw)
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "TraceSpec":
+        return cls(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
 class HeteroSpec:
     """Prefill/decode disaggregation knobs for the hetero scenario."""
     granularity: str = "reticle"
@@ -149,6 +231,7 @@ class CampaignSpec:
     workload_overrides: Optional[Dict] = None  # batch / seq / phase
     serving: Optional[ServingSpec] = None
     hetero: Optional[HeteroSpec] = None
+    trace: Optional[TraceSpec] = None          # trace_serving scenario
     checkpoint_every: int = 0                  # steps; 0 = final only
     checkpoint_keep: int = 3                   # retained ckpt generations
     async_depth: int = 0                       # in-flight eval batches;
@@ -184,6 +267,27 @@ class CampaignSpec:
         if self.scenario in ("serving", "hetero") and self.serving is None:
             raise ValueError(f"scenario {self.scenario!r} needs a `serving` "
                              "spec (request mix + SLO)")
+        if self.scenario == "trace_serving":
+            t = self.trace
+            if t is None:
+                raise ValueError("scenario 'trace_serving' needs a `trace` "
+                                 "spec (arrival process + tenants + policy)")
+            if t.policy not in TRACE_POLICIES:
+                raise ValueError(f"trace policy {t.policy!r} not in "
+                                 f"{TRACE_POLICIES}")
+            from repro.core.traces import POLICIES
+            if t.policies and (t.policy != "search"
+                               or any(p not in POLICIES
+                                      for p in t.policies)):
+                raise ValueError(
+                    "trace.policies narrows the searched policy set — it "
+                    "requires policy='search' and a subset of "
+                    f"{POLICIES} (got policy={t.policy!r}, "
+                    f"policies={t.policies})")
+            if t.kind not in ("poisson", "spike", "diurnal"):
+                raise ValueError(f"trace kind {t.kind!r} not in "
+                                 "('poisson', 'spike', 'diurnal')")
+            t.trace()        # generator kwargs / tenant dicts raise here
         if self.scenario == "hetero":
             h = self.hetero or HeteroSpec()
             if h.granularity not in HETERO_GRANULARITIES:
@@ -244,6 +348,16 @@ class CampaignSpec:
         if self.scenario == "hetero":
             return base + ("goodput", "ttft", "tpot", "slo_attainment",
                            "kv_transfer_s")
+        if self.scenario == "trace_serving":
+            t = self.trace or TraceSpec()
+            names = [d.get("name", "default") for d in t.tenants] \
+                or ["default"]
+            per_tenant = tuple(f"tenant:{n}:{m}" for n in names
+                               for m in ("goodput", "slo_attainment"))
+            return base + ("goodput", "interactive_goodput",
+                           "worst_window_goodput", "ttft", "tpot",
+                           "ttft_max", "tpot_max", "slo_attainment",
+                           "n_preemptions") + per_tenant
         return base
 
     def loop_config(self) -> LoopConfig:
@@ -289,6 +403,8 @@ class CampaignSpec:
             d["serving"] = self.serving.to_dict()
         if self.hetero is not None:
             d["hetero"] = self.hetero.to_dict()
+        if self.trace is not None:
+            d["trace"] = self.trace.to_dict()
         return d
 
     @classmethod
@@ -310,6 +426,8 @@ class CampaignSpec:
             d["serving"] = ServingSpec.from_dict(d["serving"])
         if d.get("hetero") is not None:
             d["hetero"] = HeteroSpec.from_dict(d["hetero"])
+        if d.get("trace") is not None:
+            d["trace"] = TraceSpec.from_dict(d["trace"])
         unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
         if unknown:
             raise ValueError(f"unknown campaign spec fields: "
@@ -481,6 +599,13 @@ class Campaign:
             wl = self.wl
             candidate_fn = (lambda rng, n:
                             _valid_candidates_joint(rng, n, space, wl))
+        elif (spec.scenario == "trace_serving" and spec.trace is not None
+                and spec.trace.policy == "search"):
+            # the policy axis: 14-dim candidates, each a PolicyDesign
+            from repro.core.traces import POLICIES, sample_policy_candidates
+            pols = spec.trace.policies or POLICIES
+            candidate_fn = (lambda rng, n:
+                            sample_policy_candidates(rng, n, policies=pols))
         self.loop = ExplorationLoop(spec.loop_config(), self.f0, f1=self.f1,
                                     on_handover=on_handover, state=_state,
                                     candidate_fn=candidate_fn)
@@ -522,6 +647,16 @@ class Campaign:
                 self.wl, fidelity, params_fn=params_fn,
                 max_strategies=spec.max_strategies,
                 strategy_mode=spec.strategy_mode, **kw)
+        if spec.scenario == "trace_serving":
+            from repro.explore.objectives import TraceServingObjective
+            t = spec.trace
+            return TraceServingObjective(
+                self.wl, t.trace(),
+                policy="fifo" if t.policy == "search" else t.policy,
+                slots=t.slots, window_steps=t.window_steps,
+                prefill_ratio=t.prefill_ratio, fidelity=fidelity,
+                params_fn=params_fn,
+                max_strategies=spec.max_strategies, **kw)
         sv = spec.serving
         if spec.scenario == "serving":
             return ServingObjective(
@@ -621,6 +756,7 @@ def run_campaign(spec: CampaignSpec, **kw) -> CampaignResult:
 
 __all__ = [
     "Campaign", "CampaignResult", "CampaignSpec", "FidelitySchedule",
-    "HeteroSpec", "SCENARIOS", "ServingSpec", "resolve_strategy_space",
-    "resolve_workload", "run_campaign",
+    "HeteroSpec", "SCENARIOS", "ServingSpec", "TRACE_POLICIES",
+    "TraceSpec", "resolve_strategy_space", "resolve_workload",
+    "run_campaign",
 ]

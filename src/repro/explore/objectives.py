@@ -115,7 +115,13 @@ class ConstraintSpec:
 
 
 def default_objectives(scenario: str) -> Tuple[ObjectiveSpec, ObjectiveSpec]:
-    y0 = "goodput" if scenario in ("serving", "hetero") else "throughput"
+    if scenario == "trace_serving":
+        # spike robustness: worst load window's interactive-tenant goodput
+        y0 = "worst_window_goodput"
+    elif scenario in ("serving", "hetero"):
+        y0 = "goodput"
+    else:
+        y0 = "throughput"
     return (ObjectiveSpec(y0, "max", "log1p"),
             ObjectiveSpec("power_per_wafer", "min", "neg_log"))
 
@@ -412,6 +418,75 @@ class HeteroServingObjective(Objective):
         return out
 
 
+class TraceServingObjective(Objective):
+    """Trace-driven multi-tenant serving objective (DESIGN.md §14):
+    candidates are scored by replaying a `RequestTrace` under an
+    admission/routing policy through `traces.evaluate_trace_serving_batch`.
+    The default objective pair is (worst-window interactive goodput,
+    power-per-wafer) — which design keeps chat inside its tenant SLO
+    through the worst load spike, at what power. Candidates may be
+    `PolicyDesign`s (each carrying its own searched policy) or plain
+    designs scored under `policy`; per-tenant goodput/attainment flow out
+    as `tenant:<name>:*` metrics so constraints can pin a specific class."""
+
+    def __init__(self, wl: LLMWorkload, trace, *, policy: str = "fifo",
+                 slots: int = 8, window_steps: int = 64,
+                 prefill_ratio: float = 0.5,
+                 fidelity: Union[str, FidelityBackend] = "analytical",
+                 gnn_params: Optional[Dict] = None,
+                 params_fn: Optional[Callable[[], Optional[Dict]]] = None,
+                 objectives: Optional[Sequence[ObjectiveSpec]] = None,
+                 constraints: Sequence[ConstraintSpec] = (),
+                 max_strategies: int = 24,
+                 penalty: Tuple[float, float] = PENALTY):
+        super().__init__(objectives, constraints, penalty,
+                         scenario="trace_serving")
+        self.wl = wl
+        self.trace = trace
+        self.policy = policy
+        self.slots = slots
+        self.window_steps = window_steps
+        self.prefill_ratio = prefill_ratio
+        self.backend = get_backend(fidelity)
+        self.fidelity = self.backend.name
+        self._gnn_params = gnn_params
+        self._params_fn = params_fn
+        self.max_strategies = max_strategies
+
+    def gnn_params(self) -> Optional[Dict]:
+        return self._params_fn() if self._params_fn else self._gnn_params
+
+    def metrics(self, designs: List[WSCDesign]) -> List[Dict[str, float]]:
+        from repro.core.traces import evaluate_trace_serving_batch
+        rs = evaluate_trace_serving_batch(
+            designs, self.wl, self.trace, slots=self.slots,
+            policy=self.policy, window_steps=self.window_steps,
+            prefill_ratio=self.prefill_ratio, fidelity=self.backend,
+            gnn_params=self.gnn_params(),
+            max_strategies=self.max_strategies)
+        out = []
+        for r in rs:
+            m = {
+                "goodput": r.goodput_tok_s,
+                "interactive_goodput": r.interactive_goodput_tok_s,
+                "worst_window_goodput": r.worst_window_goodput_tok_s,
+                "throughput": r.throughput_tok_s,
+                "ttft": r.ttft_s, "ttft_max": r.ttft_max_s,
+                "tpot": r.tpot_s, "tpot_max": r.tpot_max_s,
+                "slo_attainment": r.slo_attainment,
+                "n_preemptions": float(r.n_preemptions),
+                "power": r.power_w,
+                "power_per_wafer": r.power_w / max(r.n_wafers, 1),
+                "n_wafers": float(r.n_wafers),
+                "feasible": r.feasible and np.isfinite(r.power_w),
+            }
+            for name, tm in r.per_tenant.items():
+                m[f"tenant:{name}:goodput"] = tm["goodput_tok_s"]
+                m[f"tenant:{name}:slo_attainment"] = tm["slo_attainment"]
+            out.append(m)
+        return out
+
+
 class CallableObjective(Objective):
     """Compat adapter for legacy objective callables: scalar
     ``f(design) -> (y0, y1)`` functions and ``.batched``-marked batch
@@ -449,5 +524,6 @@ def as_objective(f) -> Objective:
 __all__ = [
     "CallableObjective", "ConstraintSpec", "EvaluatorObjective",
     "HeteroServingObjective", "Objective", "ObjectiveSpec", "PENALTY",
-    "ServingObjective", "as_objective", "default_objectives",
+    "ServingObjective", "TraceServingObjective", "as_objective",
+    "default_objectives",
 ]

@@ -5,11 +5,23 @@ the request queue (single-request prefill into a fresh B=1 cache, then the
 K/V/state tensors are spliced into the batched cache at that slot). Per-slot
 position vectors keep sequences independent. Straggler/pathological requests
 are bounded by `max_new_tokens`.
+
+Timed, multi-tenant serving (DESIGN.md §14): every call to `step()` ticks a
+discrete clock `t` (even when no slot is live), and a request only becomes
+eligible once `t >= submit_at` — the engine counterpart of
+`core.traces.trace_schedule`'s decode-step-indexed arrivals. The admission
+`policy` mirrors the analytic scheduler exactly: "fifo" admits in
+(submit_at, submission order); "priority" sorts eligible requests by tenant
+priority first; "preempt" additionally lets a waiting request evict the
+most-recently-admitted active *preemptible* (interactive=False) request of
+strictly lower priority — the victim keeps its generated tokens and
+re-prefills prompt + generated on re-admission. `replay_trace` replays a
+`RequestTrace` end to end; tests/test_traces.py cross-validates the
+recorded admit/finish steps bitwise against `trace_schedule`.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Dict, List, Optional
 
 import jax
@@ -21,6 +33,11 @@ from repro.models import model as M
 from repro.models.runtime import Runtime
 from repro.serve.serve_step import make_decode_step, sample_logits
 
+#: Admission policies the engine implements (the shared-pool subset of
+#: `core.traces.POLICIES`; "disaggregated" is a routing choice above the
+#: single-pool engine).
+ENGINE_POLICIES = ("fifo", "priority", "preempt")
+
 
 @dataclasses.dataclass
 class Request:
@@ -29,20 +46,33 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0
     output: Optional[List[int]] = None
+    # timed multi-tenant submission
+    submit_at: int = 0              # step at which the request arrives
+    priority: int = 0               # higher wins under priority/preempt
+    interactive: bool = True        # False = preemptible offline/batch
+    # bookkeeping recorded by the engine (cross-validated vs trace_schedule)
+    admit_step: int = -1            # step of FIRST admission
+    finish_step: int = -1
+    n_preemptions: int = 0
+    seq: int = -1                   # submission order, set by submit()
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, rt: Runtime, params,
                  slots: int = 4, max_len: int = 512,
-                 eos_token: Optional[int] = None):
+                 eos_token: Optional[int] = None, policy: str = "fifo"):
         if cfg.family in ("encdec", "vlm"):
             raise NotImplementedError(
                 "engine supports decoder-only families; encdec/vlm use the "
                 "prefill/decode steps directly")
+        if policy not in ENGINE_POLICIES:
+            raise ValueError(
+                f"policy {policy!r} not in {ENGINE_POLICIES}")
         self.cfg, self.rt, self.params = cfg, rt, params
         self.slots, self.max_len = slots, max_len
         self.eos = eos_token
-        self.queue: deque[Request] = deque()
+        self.policy = policy
+        self.queue: List[Request] = []
         self.active: List[Optional[Request]] = [None] * slots
         self.pos = np.zeros(slots, np.int32)
         self.last_tok = np.zeros(slots, np.int32)
@@ -50,6 +80,9 @@ class ServeEngine:
         self._decode = jax.jit(make_decode_step(cfg, rt), donate_argnums=(3,))
         self._prefill1 = jax.jit(self._prefill_one)
         self.rng = jax.random.PRNGKey(0)
+        self.t = 0                    # discrete step clock (idle steps tick)
+        self._n_admits = 0
+        self._slot_admit = [-1] * slots   # admission event index per slot
 
     # -- internals ----------------------------------------------------------
 
@@ -66,32 +99,93 @@ class ServeEngine:
             return big.at[:, slot:slot + 1].set(small)
         self.cache = jax.tree.map(splice, self.cache, cache1)
 
+    def _key(self, req: Request):
+        if self.policy == "fifo":
+            return (req.submit_at, req.seq)
+        return (-req.priority, req.submit_at, req.seq)
+
+    def _admit_into(self, slot: int, req: Request):
+        """Prefill `req` into `slot`. Fresh admission prefills the prompt
+        and samples the first token; a preempted request re-prefills
+        prompt + generated-so-far and resumes without sampling (the next
+        token comes from the next decode step)."""
+        resumed = bool(req.output)
+        if not resumed:
+            req.output = []
+            toks = np.asarray(req.prompt, np.int32)
+        else:
+            # cache holds positions 0..pos-1; output[-1] rides as last_tok
+            toks = np.concatenate([np.asarray(req.prompt, np.int32),
+                                   np.asarray(req.output[:-1], np.int32)])
+        logits, cache1 = self._prefill1(self.params,
+                                        jnp.asarray(toks)[None, :])
+        self._splice_cache(slot, cache1)
+        if not resumed:
+            self.rng, k = jax.random.split(self.rng)
+            first = int(sample_logits(logits, k, req.temperature)[0])
+            req.output.append(first)
+            req.admit_step = self.t
+        self.active[slot] = req
+        self.pos[slot] = len(toks)
+        self.last_tok[slot] = req.output[-1]
+        self._slot_admit[slot] = self._n_admits
+        self._n_admits += 1
+
     def _admit(self):
-        for slot in range(self.slots):
-            if self.active[slot] is None and self.queue:
-                req = self.queue.popleft()
-                req.output = []
-                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-                logits, cache1 = self._prefill1(self.params, toks)
-                self._splice_cache(slot, cache1)
-                self.rng, k = jax.random.split(self.rng)
-                first = int(sample_logits(logits, k, req.temperature)[0])
-                req.output.append(first)
-                self.active[slot] = req
-                self.pos[slot] = len(req.prompt)
-                self.last_tok[slot] = first
+        elig = sorted((r for r in self.queue if r.submit_at <= self.t),
+                      key=self._key)
+        for req in list(elig):
+            slot = next((s for s in range(self.slots)
+                         if self.active[s] is None), None)
+            if slot is None:
+                break
+            elig.remove(req)
+            self.queue.remove(req)
+            self._admit_into(slot, req)
+        if self.policy != "preempt":
+            return
+        for req in elig:
+            victims = [s for s in range(self.slots)
+                       if self.active[s] is not None
+                       and not self.active[s].interactive
+                       and self.active[s].priority < req.priority]
+            if not victims:
+                continue
+            slot = max(victims, key=lambda s: self._slot_admit[s])
+            victim = self.active[slot]
+            victim.n_preemptions += 1
+            # victim keeps its progress and rejoins the queue; it is not
+            # re-eligible until the next step (elig was snapshotted)
+            self.queue.append(victim)
+            self.queue.remove(req)
+            self._admit_into(slot, req)
 
     # -- public -------------------------------------------------------------
 
     def submit(self, req: Request):
-        assert len(req.prompt) + req.max_new_tokens <= self.max_len
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds engine "
+                f"max_len ({self.max_len})")
+        if req.submit_at < 0:
+            raise ValueError(
+                f"request {req.rid}: submit_at must be >= 0 "
+                f"(got {req.submit_at})")
+        # monotone submission counter (queue length shrinks on admission)
+        self._seq_ctr = getattr(self, "_seq_ctr", 0)
+        req.seq = self._seq_ctr
+        self._seq_ctr += 1
         self.queue.append(req)
 
     def step(self) -> int:
-        """One batched decode step; returns number of active slots."""
+        """One clock tick: admissions, then — if any slot is live — one
+        batched decode step. Idle ticks (future arrivals only) still
+        advance the clock. Returns the number of live slots decoded."""
         self._admit()
         live = [s for s in range(self.slots) if self.active[s] is not None]
         if not live:
+            self.t += 1
             return 0
         tokens = jnp.asarray(self.last_tok, jnp.int32)[:, None]
         pos = jnp.asarray(self.pos, jnp.int32)
@@ -113,7 +207,10 @@ class ServeEngine:
             done = (len(req.output) >= req.max_new_tokens
                     or (self.eos is not None and tok == self.eos))
             if done:
+                req.finish_step = self.t
                 self.active[s] = None
+                self._slot_admit[s] = -1
+        self.t += 1
         return len(live)
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
@@ -132,3 +229,25 @@ class ServeEngine:
                         out[rid] = r.output
                         del pending[rid]
         return out
+
+
+def replay_trace(engine: ServeEngine, trace, *, rng=None,
+                 temperature: float = 0.0) -> List[Request]:
+    """Replay a `core.traces.RequestTrace` on a real engine: one `Request`
+    per trace entry (synthetic prompts; arrival step -> `submit_at`, tenant
+    -> priority/interactive, out length -> `max_new_tokens`), submitted in
+    trace order and run to completion. Returns the requests with their
+    engine-recorded `admit_step`/`finish_step`, which tests cross-validate
+    bitwise against `trace_schedule(trace, engine.slots, engine.policy)`."""
+    rng = np.random.default_rng(0) if rng is None else rng
+    reqs = []
+    for r in range(trace.n_requests):
+        tc = trace.tenant_of(r)
+        prompt = rng.integers(0, engine.cfg.vocab, trace.prompt_lens[r],
+                              dtype=np.int32)
+        reqs.append(Request(
+            rid=r, prompt=prompt, max_new_tokens=int(trace.out_lens[r]),
+            temperature=temperature, submit_at=int(trace.arrival_steps[r]),
+            priority=tc.priority, interactive=tc.interactive))
+    engine.run(reqs)
+    return reqs
